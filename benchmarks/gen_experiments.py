@@ -1,0 +1,94 @@
+"""Generate the EXPERIMENTS.md §Dry-run/§Roofline tables from the dry-run
+JSONs (baseline snapshot + current optimized results).
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+CUR = os.path.join(HERE, "results", "dryrun")
+BASE = os.path.join(HERE, "results", "dryrun_baseline")
+
+
+def load(d):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        out[(r["arch"], r["shape"], r["mesh"])] = r
+    return out
+
+
+def fmt_s(x):
+    return f"{x*1e3:9.1f}" if x < 1000 else f"{x:8.1f}s"
+
+
+def roofline_table(cur, mesh="pod16x16"):
+    lines = ["| arch | shape | C ms | M ms | N ms | dominant | useful-F | "
+             "roofline | GiB/chip |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(cur.items()):
+        if m != mesh:
+            continue
+        if r["status"] == "skipped":
+            lines.append(f"| {a} | {s} | — | — | — | SKIP (assignment) "
+                         f"| — | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {a} | {s} | ERR | | | | | | |")
+            continue
+        t = r["terms_s"]
+        uf = r["useful_flops_fraction"]
+        lines.append(
+            f"| {a} | {s} | {t['compute']*1e3:.1f} | {t['memory']*1e3:.1f} "
+            f"| {t['collective']*1e3:.1f} | {r['dominant']} "
+            f"| {uf*100:.0f}% | {r['roofline_fraction']*100:.1f}% "
+            f"| {r['peak_bytes_per_chip']/2**30:.1f} |")
+    return "\n".join(lines)
+
+
+def delta_table(cur, base):
+    lines = ["| cell | baseline roofline | optimized | bound before->after |",
+             "|---|---|---|---|"]
+    for key in sorted(cur):
+        c, b = cur[key], base.get(key)
+        if not b or c["status"] != "ok" or b["status"] != "ok":
+            continue
+        rb, rc = b["roofline_fraction"], c["roofline_fraction"]
+        if abs(rc - rb) / max(rb, 1e-9) < 0.15:
+            continue
+        lines.append(f"| {key[0]}/{key[1]}/{key[2]} | {rb*100:.1f}% "
+                     f"| {rc*100:.1f}% | {b['bound_s']:.1f}s -> "
+                     f"{c['bound_s']:.1f}s |")
+    return "\n".join(lines)
+
+
+def summary(cur):
+    ok = [r for r in cur.values() if r["status"] == "ok"]
+    sk = [r for r in cur.values() if r["status"] == "skipped"]
+    er = [r for r in cur.values() if r["status"] == "error"]
+    doms = {}
+    for r in ok:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    return (f"{len(ok)} cells compiled, {len(sk)} skipped per assignment, "
+            f"{len(er)} errors; dominant terms: {doms}")
+
+
+def main():
+    cur, base = load(CUR), load(BASE)
+    print("== summary ==")
+    print(summary(cur))
+    print("\n== roofline (single-pod) ==")
+    print(roofline_table(cur))
+    print("\n== multi-pod ==")
+    print(roofline_table(cur, "pod2x16x16"))
+    print("\n== baseline -> optimized deltas (>15% change) ==")
+    print(delta_table(cur, base))
+
+
+if __name__ == "__main__":
+    main()

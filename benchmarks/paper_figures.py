@@ -1,0 +1,126 @@
+"""One benchmark per MPNA paper table/figure (the faithful reproduction).
+
+Each function returns rows of (name, us_per_call, derived) where *derived*
+is the paper-comparable number; ``benchmarks.run`` prints the CSV.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+Row = Tuple[str, float, str]
+
+
+def _timeit(fn, *args, reps: int = 3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def fig1() -> List[Row]:
+    from repro.core.perf_model import fig1_speedups
+    us, sp = _timeit(fig1_speedups)
+    rows = []
+    for n, d in sp.items():
+        rows.append((f"fig1/conv_speedup_{n}x{n}", us, f"{d['conv']:.1f}x"))
+        rows.append((f"fig1/fc_speedup_{n}x{n}", us, f"{d['fc']:.2f}x"))
+    return rows
+
+
+def fig12a() -> List[Row]:
+    from repro.core.perf_model import fig12a_safc_speedup
+    us, v = _timeit(fig12a_safc_speedup)
+    _, vb = _timeit(lambda: fig12a_safc_speedup(bw_limited=True))
+    return [("fig12a/safc_fc_speedup_saturating", us,
+             f"{v:.2f}x (paper 8.1x)"),
+            ("fig12a/safc_fc_speedup_dram_capped", us, f"{vb:.2f}x")]
+
+
+def fig12b() -> List[Row]:
+    from repro.core.perf_model import fig12b_mpna_speedup
+    us, d = _timeit(fig12b_mpna_speedup)
+    return [(f"fig12b/mpna_vs_conventional_{n}x{n}", us,
+             f"{v:.2f}x (paper band 1.4-7.2x)") for n, v in d.items()]
+
+
+def fig12c() -> List[Row]:
+    from repro.core.perf_model import fig12c_access_reduction
+    us, a = _timeit(fig12c_access_reduction)
+    _, v = _timeit(lambda: fig12c_access_reduction("vgg16"))
+    _, f = _timeit(lambda: fig12c_access_reduction(conv_only=False))
+    return [("fig12c/dram_access_reduction_alexnet_conv", us,
+             f"{a*100:.1f}% (paper 53%)"),
+            ("fig12c/dram_access_reduction_vgg16_conv", us, f"{v*100:.1f}%"),
+            ("fig12c/dram_access_reduction_alexnet_full", us,
+             f"{f*100:.1f}% (FC weight read is irreducible)")]
+
+
+def fig12e() -> List[Row]:
+    from repro.core.perf_model import fig12e_energy_saving
+    us, v = _timeit(fig12e_energy_saving)
+    _, a = _timeit(lambda: fig12e_energy_saving("alexnet"))
+    return [("fig12e/energy_saving_vgg16", us, f"{v*100:.1f}% (paper 51%)"),
+            ("fig12e/energy_saving_alexnet", us, f"{a*100:.1f}%")]
+
+
+def table1() -> List[Row]:
+    from repro.models.cnn import network_stats
+    rows = []
+    for net, pc, pf in (("alexnet", 1.07e9, 58.62e6),
+                        ("vgg16", 15.34e9, 123.63e6)):
+        t0 = time.perf_counter()
+        st = network_stats(net)
+        us = (time.perf_counter() - t0) * 1e6
+        cm = sum(l.macs for l in st if l.kind == "conv")
+        fm = sum(l.macs for l in st if l.kind == "fc")
+        rows.append((f"table1/{net}_conv_macs", us,
+                     f"{cm/1e9:.2f}B (paper {pc/1e9:.2f}B)"))
+        rows.append((f"table1/{net}_fc_macs", us,
+                     f"{fm/1e6:.2f}M (paper {pf/1e6:.2f}M)"))
+    return rows
+
+
+def table3() -> List[Row]:
+    from repro.core.perf_model import table3_throughput
+    us, t = _timeit(table3_throughput)
+    return [("table3/alexnet_gops", us,
+             f"{t['gops']:.1f} (paper 35.8; ours omits DMA/control stalls)"),
+            ("table3/alexnet_gops_per_w", us,
+             f"{t['gops_per_w']:.1f} (paper 149.7 at its 35.8 GOPS)"),
+            ("table3/peak_gops", us, f"{t['peak_gops']:.1f}"),
+            ("table3/alexnet_latency_ms", us, f"{t['latency_ms']:.1f}")]
+
+
+def fig6_reuse() -> List[Row]:
+    """Fig. 6b/c: weight reuse = |OF| for CONV, 1 for FC."""
+    from repro.models.cnn import network_stats
+    rows = []
+    for net in ("alexnet", "vgg16"):
+        st = network_stats(net)
+        conv_reuse = [l.weight_reuse for l in st if l.kind == "conv"]
+        fc_reuse = [l.weight_reuse for l in st if l.kind == "fc"]
+        rows.append((f"fig6/{net}_conv_weight_reuse", 0.0,
+                     f"{min(conv_reuse)}..{max(conv_reuse)}"))
+        rows.append((f"fig6/{net}_fc_weight_reuse", 0.0,
+                     f"{max(fc_reuse)} (paper: 1 per sample)"))
+    return rows
+
+
+def fig11_overhead() -> List[Row]:
+    """Fig. 11: SA-FC area/power overhead vs SA-CONV — published constants
+    (2.1% / 4.4%); our double-buffer ablation quantifies the latency side."""
+    from repro.core.perf_model import network_cycles
+    from repro.core.accelerator import SystolicArray
+    arr = SystolicArray(8, 8)
+    t_db = network_cycles("alexnet", arr, double_buffer=True).conv_cycles
+    t_nd = network_cycles("alexnet", arr, double_buffer=False).conv_cycles
+    return [("fig11/safc_area_overhead", 0.0, "2.1% (published)"),
+            ("fig11/safc_power_overhead", 0.0, "4.4% (published)"),
+            ("fig11/weight_double_buffer_conv_speedup", 0.0,
+             f"{t_nd/t_db:.3f}x")]
+
+
+ALL = [table1, fig1, fig6_reuse, fig11_overhead, fig12a, fig12b, fig12c,
+       fig12e, table3]

@@ -1,0 +1,80 @@
+"""§Roofline report: aggregate the dry-run JSONs into the per-(arch x shape
+x mesh) table (written to benchmarks/results/roofline.md, summarized in
+EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List, Tuple
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+OUT_MD = os.path.join(os.path.dirname(__file__), "results", "roofline.md")
+
+
+def load() -> List[dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _fmt(rec: dict) -> str:
+    if rec["status"] != "ok":
+        why = rec.get("reason", rec.get("error", ""))[:48]
+        return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                f"{rec['status'].upper()} {why} |  |  |  |  |  |")
+    t = rec["terms_s"]
+    return (f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} "
+            f"| {t['compute']*1e3:.1f} | {t['memory']*1e3:.1f} "
+            f"| {t['collective']*1e3:.1f} | {rec['dominant']} "
+            f"| {rec['useful_flops_fraction']*100:.0f}% "
+            f"| {rec['roofline_fraction']*100:.1f}% |")
+
+
+def write_markdown(recs: List[dict]) -> str:
+    lines = [
+        "# Roofline table (dry-run derived; TPU v5e terms)",
+        "",
+        "Terms in ms: compute = FLOPs/(chips*197e12); memory = "
+        "HLO bytes/(chips*819e9); collective = wire bytes/(50e9/link).",
+        "",
+        "| arch | shape | mesh | C ms | M ms | N ms | dominant | "
+        "useful-FLOPs | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for rec in recs:
+        lines.append(_fmt(rec))
+    md = "\n".join(lines) + "\n"
+    os.makedirs(os.path.dirname(OUT_MD), exist_ok=True)
+    with open(OUT_MD, "w") as f:
+        f.write(md)
+    return md
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    recs = load()
+    if not recs:
+        return [("roofline/no_dryrun_results", 0.0,
+                 "run: python -m repro.launch.dryrun --all")]
+    write_markdown(recs)
+    out = []
+    ok = [r for r in recs if r["status"] == "ok"]
+    skip = [r for r in recs if r["status"] == "skipped"]
+    err = [r for r in recs if r["status"] == "error"]
+    out.append(("roofline/cells_ok", 0.0, str(len(ok))))
+    out.append(("roofline/cells_skipped_per_assignment", 0.0,
+                str(len(skip))))
+    out.append(("roofline/cells_error", 0.0, str(len(err))))
+    for r in ok:
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        t = r["terms_s"]
+        out.append((name, r["compile_s"] * 1e6,
+                    f"dom={r['dominant']} C={t['compute']*1e3:.1f}ms "
+                    f"M={t['memory']*1e3:.1f}ms N={t['collective']*1e3:.1f}ms "
+                    f"roofline={r['roofline_fraction']*100:.1f}%"))
+    return out
+
+
+ALL = [rows]

@@ -1,0 +1,36 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure plus
+kernel/planner micro-benches and the dry-run roofline report.
+
+Prints ``name,us_per_call,derived`` CSV (scaffold contract).
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import kernel_bench, paper_figures, roofline_report
+
+    groups = []
+    groups += paper_figures.ALL
+    groups += kernel_bench.ALL
+    groups += roofline_report.ALL
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in groups:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:                      # noqa: BLE001
+            failures += 1
+            print(f"{fn.__module__}.{fn.__name__},0,ERROR {e!r}",
+                  file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark groups failed")
+
+
+if __name__ == "__main__":
+    main()

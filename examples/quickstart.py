@@ -1,0 +1,59 @@
+"""Quickstart: the MPNA heterogeneous engine in 60 seconds.
+
+Runs the paper's two dataflows (SA-CONV weight-stationary / SA-FC
+weight-streaming Pallas kernels, interpret mode on CPU), shows the
+arithmetic-intensity dispatch, the Case 1-4 planner, and one training
+step of a small LM through the same engine.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dataflow, engine
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.train import train_step as TS
+from repro.data.pipeline import DataConfig, SyntheticLM
+
+
+def main():
+    print("== 1. heterogeneous dispatch (paper Sec. IV) ==")
+    for name, (m, n, k) in {
+            "prefill matmul": (8192, 4096, 4096),
+            "decode GEMV  ": (8, 4096, 4096)}.items():
+        plan = dataflow.plan_matmul(m, n, k)
+        print(f"  {name}: ({m}x{k})@({k}x{n}) -> {plan.regime:8s} "
+              f"case {plan.case}, tile ({plan.bm},{plan.bn},{plan.bk}), "
+              f"planned HBM {plan.hbm_bytes/2**20:.0f} MiB "
+              f"(compulsory {dataflow.compulsory_bytes(m,n,k)/2**20:.0f})")
+
+    print("\n== 2. both dataflows compute the same operator ==")
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    with engine.execution("pallas"), engine.dispatch_trace() as tr:
+        y_pal = engine.matmul(x, w, act="relu")
+    y_ref = engine.matmul(x, w, act="relu")        # XLA oracle path
+    np.testing.assert_allclose(y_pal, y_ref, rtol=3e-5, atol=3e-5)
+    print(f"  pallas({tr[0]['regime']}) == oracle: "
+          f"max|diff| = {float(jnp.max(jnp.abs(y_pal - y_ref))):.2e}")
+
+    print("\n== 3. one LM train step through the engine ==")
+    cfg = ModelConfig(name="quick", family="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                      head_dim=16, param_dtype="float32",
+                      compute_dtype="float32")
+    tc = TrainConfig(global_batch=4, seq_len=32, total_steps=3)
+    step = jax.jit(TS.make_train_step(cfg, tc))
+    state = TS.init_train_state(cfg, tc, jax.random.PRNGKey(0))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 4), cfg)
+    params, opt, cs = state
+    for i in range(3):
+        params, opt, cs, m = step(params, opt, cs, data.batch_at(i))
+        print(f"  step {i}: loss {float(m['loss']):.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro — MPNA's heterogeneous systolic dataflows as a multi-pod JAX
+training/serving framework.
+
+Paper: "MPNA: A Massively-Parallel Neural Array Accelerator with Dataflow
+Optimization for Convolutional Neural Networks" (Hanif, Putra, et al.,
+2018).  See DESIGN.md for the TPU adaptation and EXPERIMENTS.md for the
+reproduction + roofline results.
+"""
+
+__version__ = "1.0.0"

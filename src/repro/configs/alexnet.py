@@ -1,0 +1,3 @@
+"""AlexNet — the paper's primary workload (Table I, Figs. 1/6/12)."""
+ARCH = "alexnet"
+INPUT_RES = 227

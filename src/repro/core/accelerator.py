@@ -1,0 +1,80 @@
+"""Hardware descriptions.
+
+Two machines appear in this repo:
+
+* :data:`MPNA_PAPER` — the ASIC of the paper (Table II/III), used by the
+  faithful cycle/energy reproduction in :mod:`repro.core.perf_model`.
+* :data:`TPU_V5E` — the roofline target for the JAX/Pallas framework
+  (assignment constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class SystolicArray:
+    rows: int    # K — contraction tile held per column
+    cols: int    # L — parallel filters / output channels
+    # SA-FC has per-PE weight buses (weights replaced every cycle);
+    # SA-CONV streams weights through the array (K-cycle refill),
+    # hidden by the double-buffer register after the first tile.
+    dedicated_weight_buses: bool = False
+
+    @property
+    def macs_per_cycle(self) -> int:
+        return self.rows * self.cols
+
+
+@dataclass(frozen=True)
+class MPNAConfig:
+    """Paper Table II."""
+    sa_conv: SystolicArray = SystolicArray(8, 8, dedicated_weight_buses=False)
+    sa_fc: SystolicArray = SystolicArray(8, 8, dedicated_weight_buses=True)
+    spm_bytes: int = 256              # per accumulation sub-unit
+    weight_buffer_bytes: int = 36 * 1024
+    data_buffer_bytes: int = 256 * 1024
+    dram_bandwidth: float = 12.8e9    # B/s   [16]
+    frequency: float = 280e6          # Hz
+    weight_bytes: int = 1             # 8-bit fixed point
+    act_bytes: int = 1
+    # published physical numbers (28 nm synthesis) — used as constants, we
+    # do not re-synthesize; see DESIGN.md §7.
+    power_w: float = 0.239
+    area_mm2: float = 2.34
+
+    @property
+    def dram_bytes_per_cycle(self) -> float:
+        return self.dram_bandwidth / self.frequency
+
+
+#: Energy per operation class, pJ.  Standard 28/32 nm-scaled numbers in the
+#: style of Horowitz ISSCC'14 as used by Eyeriss-era accelerator papers:
+#: DRAM access dominates SRAM access dominates an 8-bit MAC.
+ENERGY_PJ = {
+    "dram_byte": 160.0,     # ~200 pJ / 16-bit word scaled to byte granularity
+    "sram_byte": 1.25,      # large on-chip buffer
+    "spm_byte": 0.6,        # small scratch-pad
+    "mac8": 0.2,            # 8-bit MAC @28 nm
+}
+
+
+@dataclass(frozen=True)
+class TPUChip:
+    peak_flops_bf16: float = 197e12    # FLOP/s
+    hbm_bandwidth: float = 819e9       # B/s
+    ici_link_bandwidth: float = 50e9   # B/s per link (per direction)
+    hbm_bytes: int = 16 * 1024**3      # v5e: 16 GiB
+    vmem_bytes: int = 128 * 1024**2    # ~128 MiB VMEM
+    # usable VMEM budget the dataflow planner hands to kernels
+    vmem_budget: int = 96 * 1024**2
+
+    @property
+    def ridge_flops_per_byte(self) -> float:
+        """Arithmetic-intensity ridge point — the SA-CONV/SA-FC dispatch
+        threshold of :mod:`repro.core.engine`."""
+        return self.peak_flops_bf16 / self.hbm_bandwidth   # ~240 FLOP/B
+
+
+MPNA_PAPER = MPNAConfig()
+TPU_V5E = TPUChip()

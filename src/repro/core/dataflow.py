@@ -1,0 +1,183 @@
+"""Dataflow optimization — the paper's Cases 1-4, adapted to TPU VMEM.
+
+The paper's planner decides, per layer, *which operands stay on-chip*
+(input activations / output activations / weights) given the 256 KB data
+buffer, 36 KB weight buffer and 256 B accumulation SPMs, to minimize DRAM
+traffic (Sec. V, Fig. 9).  On TPU the on-chip store is VMEM and "DRAM
+traffic" is HBM bytes; the decision becomes the Pallas block shapes +
+grid loop order of the matmul kernels.
+
+Case mapping (paper -> here, for an (M,K) x (K,N) matmul where
+x = input activations, w = weights, o = output activations):
+
+* **Case 1** — x, o and a K x L weight tile all fit: one grid pass, every
+  operand read from HBM exactly once.  (Paper: later CONV layers.)
+* **Case 2** — x and o fit but one output column-block exceeds the
+  accumulator tile: partition N, x stays resident, weights once.
+* **Case 3** — x+o don't fit together; keep x resident (paper prefers
+  input activations), stream w, spill o per tile.
+* **Case 4** — nothing fits: fully tiled; block shapes chosen to minimize
+  the analytic HBM traffic under the VMEM budget (the SmartShuttle-style
+  search of the paper's reference [15]), with the constraints that N-tiles
+  are multiples of L(=lane 128) and K-tiles multiples of K(=sublane pack).
+
+The planner returns an analytic traffic count which `tests/test_dataflow.py`
+property-checks (traffic never below the compulsory minimum, monotone in
+buffer size, etc.) and which the roofline/perf model consumes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+from repro.core.accelerator import TPU_V5E, TPUChip
+
+# MXU/VREG-aligned minimum tile granularity (bf16 packing: sublane 16, lane 128)
+LANE = 128
+SUBLANE = 16
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _round_down_pow2ish(x: int, m: int) -> int:
+    """Largest multiple of m that is <= x (at least m)."""
+    return max(m, (x // m) * m)
+
+
+@dataclass(frozen=True)
+class MatmulPlan:
+    """Tiling decision + analytic HBM traffic for one (M,K)x(K,N) matmul."""
+    case: int                       # 1..4  (paper's scenario id)
+    regime: str                     # 'sa_conv' | 'sa_fc'
+    bm: int
+    bn: int
+    bk: int
+    # analytic HBM bytes (reads + writes) under this tiling
+    hbm_bytes: int
+    flops: int
+    vmem_bytes: int                 # working set claimed (incl. double buffers)
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.hbm_bytes)
+
+    def grid(self, m: int, n: int, k: int) -> Tuple[int, int, int]:
+        return (math.ceil(m / self.bm), math.ceil(n / self.bn),
+                math.ceil(k / self.bk))
+
+
+def classify_regime(m: int, n: int, k: int,
+                    bytes_per_elem: int = 2,
+                    chip: TPUChip = TPU_V5E) -> str:
+    """Heterogeneous-array dispatch (the SA-CONV vs SA-FC decision).
+
+    Compulsory arithmetic intensity of the op = FLOPs / minimal bytes moved.
+    Below the chip ridge point the op is HBM-bound -> weight-streaming
+    (SA-FC) regime; above -> weight-stationary compute regime (SA-CONV).
+    This reproduces the paper's observation that per-sample weight reuse of
+    FC layers is 1 (intensity ~= 2*M) so no stationary schedule can help.
+    """
+    flops = 2 * m * n * k
+    min_bytes = (m * k + k * n + m * n) * bytes_per_elem
+    intensity = flops / min_bytes
+    return "sa_conv" if intensity >= chip.ridge_flops_per_byte else "sa_fc"
+
+
+def plan_matmul(m: int, n: int, k: int, *,
+                bytes_in: int = 2,
+                bytes_out: int = 4,
+                vmem_budget: int | None = None,
+                chip: TPUChip = TPU_V5E) -> MatmulPlan:
+    """Pick block shapes + loop order for an (m,k)@(k,n) matmul.
+
+    Traffic model for an output-stationary tiling with grid
+    (gm, gn, gk) = (m/bm, n/bn, k/bk), K innermost:
+
+        x bytes  = m*k*bytes_in  * gn     (x tile re-read per N block)
+        w bytes  = k*n*bytes_in  * gm     (w tile re-read per M block)
+        o bytes  = m*n*bytes_out          (written once; fp32 psum stays in VMEM)
+
+    VMEM claim = 2*(bm*bk + bk*bn)*bytes_in (double-buffered inputs — the
+    paper's 'parallel weight movement' register) + bm*bn*4 (psum SPM).
+    """
+    budget = vmem_budget if vmem_budget is not None else chip.vmem_budget
+    regime = classify_regime(m, n, k, bytes_in, chip)
+
+    mp = _round_up(m, SUBLANE)
+    np_ = _round_up(n, LANE)
+    kp = _round_up(k, LANE)
+
+    def vmem(bm: int, bn: int, bk: int) -> int:
+        return 2 * (bm * bk + bk * bn) * bytes_in + bm * bn * 4
+
+    def traffic(bm: int, bn: int, bk: int) -> int:
+        gm, gn = math.ceil(mp / bm), math.ceil(np_ / bn)
+        return mp * kp * bytes_in * gn + kp * np_ * bytes_in * gm \
+            + mp * np_ * bytes_out
+
+    # Candidate tilings for every scenario; the chosen plan is the
+    # min-traffic feasible one (the SmartShuttle [15] objective the paper
+    # adopts for Case 4, applied uniformly — a structurally "nicer" case
+    # is taken only when it actually moves fewer bytes, which also makes
+    # planned traffic monotone in the buffer budget: hypothesis-tested in
+    # tests/test_dataflow.py).
+    candidates = []                                    # (case, bm, bn, bk)
+
+    # Case 1: whole problem resident
+    if vmem(mp, np_, kp) <= budget:
+        candidates.append((1, mp, np_, kp))
+
+    # Case 2: x + full-K resident, partition N
+    bn = _round_down_pow2ish(np_, LANE)
+    while bn > LANE and vmem(mp, bn, kp) > budget:
+        bn = _round_down_pow2ish(bn // 2, LANE)
+    if vmem(mp, bn, kp) <= budget:
+        candidates.append((2, mp, bn, kp))
+
+    # Case 3: x-block resident, stream w, partition K
+    bm = _round_down_pow2ish(mp, SUBLANE)
+    bk = _round_down_pow2ish(kp, LANE)
+    bn = LANE if regime == "sa_fc" else 2 * LANE
+    while vmem(bm, bn, bk) > budget and bm > SUBLANE:
+        bm = _round_down_pow2ish(bm // 2, SUBLANE)
+    while vmem(bm, bn, bk) > budget and bk > LANE:
+        bk = _round_down_pow2ish(bk // 2, LANE)
+    if vmem(bm, bn, bk) <= budget:
+        # grow bn back while it still fits (bigger N tile = fewer x re-reads)
+        while vmem(bm, 2 * bn, bk) <= budget and 2 * bn <= np_:
+            bn *= 2
+        candidates.append((3, bm, bn, bk))
+
+    # Case 4: exhaustive-ish search over aligned tilings
+    best4 = None
+    for bm4 in (SUBLANE * (2 ** i) for i in range(0, 12)):
+        if bm4 > 2 * mp:
+            break
+        for bn4 in (LANE * (2 ** i) for i in range(0, 9)):
+            if bn4 > 2 * np_:
+                break
+            for bk4 in (LANE * (2 ** i) for i in range(0, 9)):
+                if bk4 > 2 * kp:
+                    break
+                if vmem(bm4, bn4, bk4) > budget:
+                    continue
+                t = traffic(min(bm4, mp), min(bn4, np_), min(bk4, kp))
+                if best4 is None or t < best4[0]:
+                    best4 = (t, min(bm4, mp), min(bn4, np_), min(bk4, kp))
+    assert best4 is not None, "VMEM budget too small for minimum tile"
+    candidates.append((4, best4[1], best4[2], best4[3]))
+
+    case, bm, bn, bk = min(
+        candidates, key=lambda c: (traffic(c[1], c[2], c[3]), c[0]))
+    return MatmulPlan(case, regime, bm, bn, bk,
+                      hbm_bytes=traffic(bm, bn, bk),
+                      flops=2 * m * n * k, vmem_bytes=vmem(bm, bn, bk))
+
+
+def compulsory_bytes(m: int, n: int, k: int,
+                     bytes_in: int = 2, bytes_out: int = 4) -> int:
+    """Lower bound: every operand touched exactly once."""
+    return (m * k + k * n) * bytes_in + m * n * bytes_out

@@ -1,0 +1,158 @@
+"""Heterogeneous execution engine — MPNA's array dispatch as a runtime policy.
+
+The paper integrates two systolic arrays and routes each layer to the one
+whose dataflow matches the layer's reuse pattern (CONV -> SA-CONV,
+FC -> SA-FC).  Here every dense projection in every model goes through
+:func:`matmul`, which classifies the operator by *compulsory arithmetic
+intensity vs. the chip ridge point* and routes it:
+
+* ``sa_conv`` regime — compute-bound (train/prefill matmuls): the
+  weight-stationary Pallas kernel with planner-chosen Case-1..4 tiling.
+* ``sa_fc`` regime — HBM-bound (decode GEMVs, tiny-m expert matmuls): the
+  weight-streaming kernel; every weight byte moves exactly once.
+
+Dispatch decisions are made at trace time (shapes are static) and recorded
+in a trace that tests and the roofline report read — so "which array did
+this layer run on" is observable, exactly like the paper's per-layer
+schedule.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Any, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataflow
+from repro.core.accelerator import TPU_V5E
+from repro.kernels import ref
+from repro.kernels.sa_conv import sa_conv_matmul
+from repro.kernels.sa_fc import sa_fc_matmul
+
+
+@dataclass
+class _EngineState(threading.local):
+    backend: str = "xla"            # "xla" | "pallas"
+    interpret: bool = True          # pallas interpret mode (CPU validation)
+    trace: Optional[List[dict]] = None
+
+
+_STATE = _EngineState()
+
+
+@contextlib.contextmanager
+def execution(backend: str = "xla", interpret: bool = True):
+    """Select the execution path for ops issued inside the context."""
+    prev = (_STATE.backend, _STATE.interpret)
+    _STATE.backend, _STATE.interpret = backend, interpret
+    try:
+        yield
+    finally:
+        _STATE.backend, _STATE.interpret = prev
+
+
+@contextlib.contextmanager
+def dispatch_trace():
+    """Collect (name, regime, m, n, k, plan-case) dispatch records."""
+    prev = _STATE.trace
+    _STATE.trace = []
+    try:
+        yield _STATE.trace
+    finally:
+        _STATE.trace = prev
+
+
+def _record(**kw: Any) -> None:
+    if _STATE.trace is not None:
+        _STATE.trace.append(kw)
+
+
+# ---------------------------------------------------------------------------
+# pallas-path autodiff: custom VJP whose backward matmuls also go through the
+# engine (dx = g w^T is itself classified; in decode it stays sa_fc).
+# ---------------------------------------------------------------------------
+def _pallas_matmul(x2d, w, bias, act, regime, interpret):
+    if regime == "sa_fc":
+        return sa_fc_matmul(x2d, w, bias, act=act, interpret=interpret)
+    return sa_conv_matmul(x2d, w, bias, act=act, interpret=interpret)
+
+
+def _act_grad(pre, act):
+    if act == "none":
+        return jnp.ones_like(pre)
+    return jax.vjp(lambda t: ref.apply_act(t, act), pre)[1](
+        jnp.ones_like(pre))[0]
+
+
+def _make_pallas_vjp(act: str, regime: str, interpret: bool, has_bias: bool):
+    @jax.custom_vjp
+    def f(x2d, w, bias):
+        return _pallas_matmul(x2d, w, bias if has_bias else None, act,
+                              regime, interpret)
+
+    def fwd(x2d, w, bias):
+        return f(x2d, w, bias), (x2d, w, bias)
+
+    def bwd(res, g):
+        x2d, w, bias = res
+        # recompute pre-activation through the same kernels
+        pre = _pallas_matmul(x2d, w, bias if has_bias else None, "none",
+                             regime, interpret).astype(jnp.float32)
+        dpre = (g.astype(jnp.float32) * _act_grad(pre, act)).astype(x2d.dtype)
+        dx = _pallas_matmul(dpre, w.T, None, "none", regime, interpret)
+        dw = _pallas_matmul(x2d.T, dpre, None, "none", "sa_conv", interpret)
+        db = jnp.sum(dpre, axis=0).astype(bias.dtype) if has_bias else (
+            jnp.zeros((), x2d.dtype))
+        return dx, dw.astype(w.dtype), db
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def matmul(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
+           act: str = "none", name: str = "matmul",
+           out_dtype=None) -> jax.Array:
+    """``(..., k) @ (k, n)`` with fused bias+activation epilogue, routed to
+    the SA-CONV or SA-FC dataflow by arithmetic intensity.
+
+    ``w`` may be a :class:`repro.core.quant.QTensor` (int8 + per-channel
+    scales — the paper's 8-bit fixed point): dequantization fuses into the
+    dot, so HBM moves 1 byte/weight in the SA-FC regime."""
+    from repro.core.quant import QTensor, dequantize
+    if isinstance(w, QTensor):
+        w = dequantize(w, x.dtype)
+    *lead, k = x.shape
+    n = w.shape[-1]
+    m = 1
+    for s in lead:
+        m *= s
+    regime = dataflow.classify_regime(m, n, k, x.dtype.itemsize)
+    plan = dataflow.plan_matmul(m, n, k, bytes_in=x.dtype.itemsize)
+    _record(name=name, regime=regime, m=m, n=n, k=k, case=plan.case,
+            backend=_STATE.backend)
+
+    x2d = x.reshape(m, k)
+    if _STATE.backend == "pallas":
+        fn = _make_pallas_vjp(act, regime, _STATE.interpret, bias is not None)
+        out = fn(x2d, w, bias if bias is not None else jnp.zeros((), x.dtype))
+    else:
+        out = ref.matmul_bias_act(x2d, w, bias, act=act,
+                                  out_dtype=out_dtype or x.dtype)
+    return out.reshape(*lead, n).astype(out_dtype or x.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+              scale=None, name="attn"):
+    """Blocked attention; pallas flash kernel or the jnp oracle."""
+    _record(name=name, regime="attention", m=q.shape[1], n=k.shape[1],
+            k=q.shape[-1], case=0, backend=_STATE.backend)
+    if _STATE.backend == "pallas":
+        from repro.kernels.attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale,
+                               interpret=_STATE.interpret)
+    return ref.attention(q, k, v, causal=causal, window=window,
+                         softcap=softcap, scale=scale)

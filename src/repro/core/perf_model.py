@@ -1,0 +1,305 @@
+"""Faithful MPNA cycle / DRAM-traffic / energy model (paper Secs. III-VII).
+
+This mirrors the paper's own evaluation methodology: a functional/timing
+simulator plus memory-traffic and energy accounting (their RTL synthesis
+supplies area/power constants, which we take as published — DESIGN.md §7).
+
+Cycle model
+-----------
+The K x L array processes one *weight tile* (K contraction rows x L output
+columns) at a time.
+
+* SA-CONV, CONV layers: weights stationary; the tile streams M*N output
+  pixels' worth of activations -> ~M*N cycles per tile.  The per-PE double
+  buffer ("parallel weight movement") hides the K-cycle refill between
+  tiles; without it the refill stalls the array (the `double_buffer=False`
+  ablation).
+* SA-CONV, FC layers: weight reuse per sample = 1, so every tile is used
+  for ONE MAC row: K cycles of weight load per 1 cycle of compute — the
+  array idles ~K/(K+1) of the time.  This is Fig. 1's saturation.
+* SA-FC: dedicated per-PE weight buses replace the tile every cycle ->
+  1 cycle per tile *if* the weight stream sustains K*L bytes/cycle.  The
+  DRAM bound (12.8 GB/s at 280 MHz = 45.7 B/cyc vs. the 64 B/cyc the 8x8
+  array wants) caps the streaming rate (`bw_limited=True`); the paper's
+  8.1x (Fig. 12a) corresponds to the saturating accounting, both are
+  reported.
+
+DRAM-traffic model (Sec. V Cases 1-4, Table II buffers)
+-------------------------------------------------------
+MPNA: weights always fetched exactly once.  Activations ride the 256 KB
+data buffer between layers when they fit (Cases 1/2); otherwise the input
+is preferred resident (Case 3) and outputs spill.  The baseline
+("conventional"/FlexFlow-style per-layer streaming) writes every layer's
+output to DRAM, re-reads it as the next layer's input, and re-reads inputs
+once per output-channel tile group that exceeds the weight buffer.
+
+Energy model: E = dram_bytes*e_dram + sram_bytes*e_sram + macs*e_mac
+(Horowitz-style constants in repro.core.accelerator.ENERGY_PJ); DRAM
+dominates, so the Fig. 12e ~51% saving tracks the traffic reduction.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable, List, Optional
+
+from repro.core.accelerator import ENERGY_PJ, MPNA_PAPER, MPNAConfig, \
+    SystolicArray
+from repro.models.cnn import LayerStats, network_stats
+
+
+def _ceil(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# cycle model
+# ---------------------------------------------------------------------------
+def conv_cycles(l: LayerStats, arr: SystolicArray, *,
+                double_buffer: bool = True) -> float:
+    """CONV layer on a weight-stationary K x L array."""
+    K, L = arr.rows, arr.cols
+    J = l.ofm[2]
+    CRS = l.weights // J                 # contraction length I*P*Q
+    MN = l.ofm[0] * l.ofm[1]
+    tiles = _ceil(J, L) * _ceil(CRS, K)
+    stream = MN + K + L                  # activations + pipeline fill/drain
+    refill = 0 if double_buffer else K
+    return tiles * (stream + refill)
+
+
+def fc_cycles_sa_conv(l: LayerStats, arr: SystolicArray) -> float:
+    """FC layer on SA-CONV: K-cycle weight load per tile, 1 MAC row."""
+    K, L = arr.rows, arr.cols
+    J = l.ofm[2]
+    I = l.ifm[2]
+    tiles = _ceil(J, L) * _ceil(I, K)
+    return tiles * K + L                 # load-bound + drain
+
+
+def fc_cycles_sa_fc(l: LayerStats, arr: SystolicArray,
+                    mpna: MPNAConfig = MPNA_PAPER, *,
+                    bw_limited: bool = True) -> float:
+    """FC layer on SA-FC: one tile per cycle at full weight bandwidth."""
+    K, L = arr.rows, arr.cols
+    J = l.ofm[2]
+    I = l.ifm[2]
+    tiles = _ceil(J, L) * _ceil(I, K)
+    per_tile = 1.0
+    if bw_limited:
+        need = K * L * mpna.weight_bytes             # bytes per cycle wanted
+        have = mpna.dram_bytes_per_cycle
+        per_tile = max(1.0, need / have)
+    return tiles * per_tile + K + L
+
+
+@dataclass(frozen=True)
+class NetworkTiming:
+    conv_cycles: float
+    fc_cycles: float
+
+    @property
+    def total(self) -> float:
+        return self.conv_cycles + self.fc_cycles
+
+
+def network_cycles(net: str, arr: SystolicArray, *,
+                   fc_on: str = "sa_conv",
+                   n_conv_arrays: int = 1,
+                   mpna: MPNAConfig = MPNA_PAPER,
+                   double_buffer: bool = True,
+                   bw_limited: bool = True) -> NetworkTiming:
+    """fc_on: 'sa_conv' | 'sa_fc'.  n_conv_arrays=2 models MPNA running
+    CONV work on both arrays (SA-FC is CONV-capable, Sec. IV-B)."""
+    conv = fc = 0.0
+    for l in network_stats(net):
+        if l.kind == "conv":
+            conv += conv_cycles(l, arr, double_buffer=double_buffer)
+        elif fc_on == "sa_fc":
+            fc += fc_cycles_sa_fc(l, arr, mpna, bw_limited=bw_limited)
+        else:
+            fc += fc_cycles_sa_conv(l, arr)
+    return NetworkTiming(conv / n_conv_arrays, fc)
+
+
+# ---------------------------------------------------------------------------
+# paper-figure reproductions (cycle side)
+# ---------------------------------------------------------------------------
+def fig1_speedups(net: str = "alexnet",
+                  sizes: Iterable[int] = (1, 2, 4, 8)) -> dict:
+    """Fig. 1: CONV scales ~N^2, FC saturates ~N on a conventional array."""
+    base = network_cycles(net, SystolicArray(1, 1))
+    out = {}
+    for n in sizes:
+        t = network_cycles(net, SystolicArray(n, n))
+        out[n] = {"conv": base.conv_cycles / t.conv_cycles,
+                  "fc": base.fc_cycles / t.fc_cycles,
+                  "total": base.total / t.total}
+    return out
+
+
+def fig12a_safc_speedup(net: str = "alexnet", *, size: int = 8,
+                        bw_limited: bool = False) -> float:
+    """Fig. 12a: AlexNet FC on SA-FC vs. on SA-CONV (8.1x claimed)."""
+    arr = SystolicArray(size, size)
+    sa_conv = network_cycles(net, arr, fc_on="sa_conv").fc_cycles
+    sa_fc = network_cycles(net, arr, fc_on="sa_fc",
+                           bw_limited=bw_limited).fc_cycles
+    return sa_conv / sa_fc
+
+
+def fig12b_mpna_speedup(net: str = "alexnet",
+                        sizes: Iterable[int] = (2, 4, 8),
+                        bw_limited: bool = False) -> dict:
+    """Fig. 12b: MPNA (SA-CONV + SA-FC, CONV on both, FC on SA-FC) vs. a
+    conventional array of the same size (1.4x-7.2x claimed across sizes)."""
+    out = {}
+    for n in sizes:
+        arr = SystolicArray(n, n)
+        conv_t = network_cycles(net, arr, fc_on="sa_conv")
+        mpna_t = network_cycles(net, arr, fc_on="sa_fc", n_conv_arrays=2,
+                                bw_limited=bw_limited)
+        out[n] = conv_t.total / mpna_t.total
+    return out
+
+
+# ---------------------------------------------------------------------------
+# DRAM-traffic model (dataflow Cases 1-4)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TrafficReport:
+    dram_bytes: int
+    sram_bytes: int
+    case_per_layer: tuple
+
+
+def classify_case(l: LayerStats, mpna: MPNAConfig) -> int:
+    """Paper Fig. 9 scenario selection for one layer."""
+    a = mpna.act_bytes
+    in_b = l.ifm[0] * l.ifm[1] * l.ifm[2] * a
+    out_b = l.ofm[0] * l.ofm[1] * l.ofm[2] * a
+    of_map = l.ofm[0] * l.ofm[1] * a
+    ktile = mpna.sa_conv.rows * mpna.sa_conv.cols * mpna.weight_bytes
+    if in_b + out_b + ktile <= mpna.data_buffer_bytes \
+            and of_map <= mpna.spm_bytes:
+        return 1
+    if in_b + out_b <= mpna.data_buffer_bytes:
+        return 2
+    if in_b <= mpna.data_buffer_bytes:
+        return 3
+    return 4
+
+
+def mpna_traffic(net: str, mpna: MPNAConfig = MPNA_PAPER, *,
+                 conv_only: bool = False) -> TrafficReport:
+    layers = network_stats(net)
+    if conv_only:
+        layers = [l for l in layers if l.kind == "conv"]
+    a, wb = mpna.act_bytes, mpna.weight_bytes
+    dram = sram = 0
+    cases = []
+    prev_resident = False                 # does this layer's input already
+    for l in layers:                      # sit in the data buffer?
+        case = classify_case(l, mpna)
+        cases.append(case)
+        in_b = l.ifm[0] * l.ifm[1] * l.ifm[2] * a
+        out_b = l.ofm[0] * l.ofm[1] * l.ofm[2] * a
+        w_b = l.weights * wb
+        dram += w_b                       # weights exactly once (all cases)
+        if not prev_resident:
+            dram += in_b                  # first touch of the inputs
+        if case in (1, 2):
+            prev_resident = out_b <= mpna.data_buffer_bytes
+            if not prev_resident:
+                dram += out_b
+        elif case == 3:                   # inputs resident, outputs spill
+            dram += out_b
+            prev_resident = False
+        else:
+            # case 4: fully tiled — the SmartShuttle [15] choice: re-read
+            # whichever operand costs less (weights per input-block pass
+            # vs. inputs per weight-buffer pass)
+            w_passes = _ceil(w_b, mpna.weight_buffer_bytes)
+            in_passes = _ceil(in_b, mpna.data_buffer_bytes)
+            dram += min(in_b * (w_passes - 1), w_b * (in_passes - 1)) + out_b
+            prev_resident = False
+        sram += in_b + out_b + w_b        # every byte crosses the buffers
+    return TrafficReport(dram, sram, tuple(cases))
+
+
+def baseline_traffic(net: str,
+                     mpna: MPNAConfig = MPNA_PAPER, *,
+                     conv_only: bool = False) -> TrafficReport:
+    """Per-layer streaming accelerator (FlexFlow-style, 64 KB on-chip): no
+    cross-layer residency, inputs re-read per weight-buffer pass."""
+    layers = network_stats(net)
+    if conv_only:
+        layers = [l for l in layers if l.kind == "conv"]
+    a, wb = mpna.act_bytes, mpna.weight_bytes
+    buf = 64 * 1024
+    dram = sram = 0
+    for l in layers:
+        in_b = l.ifm[0] * l.ifm[1] * l.ifm[2] * a
+        out_b = l.ofm[0] * l.ofm[1] * l.ofm[2] * a
+        w_b = l.weights * wb
+        passes = max(1, _ceil(w_b, buf))
+        dram += w_b + in_b * passes + out_b
+        sram += in_b * passes + out_b + w_b
+    return TrafficReport(dram, sram, ())
+
+
+def fig12c_access_reduction(net: str = "alexnet", *,
+                            conv_only: bool = True) -> float:
+    """Fig. 12c: fraction of DRAM accesses MPNA saves vs. a FlexFlow-style
+    streaming baseline (53% claimed).  FlexFlow accelerates CONV layers
+    only (paper Table III), so the comparison is conv-only by default —
+    the full-network number is dominated by the irreducible single read
+    of the FC weights and is reported alongside."""
+    m = mpna_traffic(net, conv_only=conv_only).dram_bytes
+    b = baseline_traffic(net, conv_only=conv_only).dram_bytes
+    return 1.0 - m / b
+
+
+# ---------------------------------------------------------------------------
+# energy model
+# ---------------------------------------------------------------------------
+def network_energy_j(net: str, traffic: TrafficReport, *,
+                     conv_only: bool = False) -> float:
+    macs = sum(l.macs for l in network_stats(net)
+               if not conv_only or l.kind == "conv")
+    pj = (traffic.dram_bytes * ENERGY_PJ["dram_byte"]
+          + traffic.sram_bytes * ENERGY_PJ["sram_byte"]
+          + macs * ENERGY_PJ["mac8"])
+    return pj * 1e-12
+
+
+def fig12e_energy_saving(net: str = "vgg16", *,
+                         conv_only: bool = True) -> float:
+    """Fig. 12e: MPNA vs. baseline energy (51% saving claimed).  DRAM
+    energy dominates, so the saving tracks the traffic reduction; on the
+    full network the single FC-weight read floors the saving (reported
+    alongside in the benchmark)."""
+    e_m = network_energy_j(net, mpna_traffic(net, conv_only=conv_only),
+                           conv_only=conv_only)
+    e_b = network_energy_j(net, baseline_traffic(net, conv_only=conv_only),
+                           conv_only=conv_only)
+    return 1.0 - e_m / e_b
+
+
+# ---------------------------------------------------------------------------
+# Table III: throughput / efficiency
+# ---------------------------------------------------------------------------
+def table3_throughput(net: str = "alexnet",
+                      mpna: MPNAConfig = MPNA_PAPER) -> dict:
+    t = network_cycles(net, mpna.sa_conv, fc_on="sa_fc", n_conv_arrays=2,
+                       bw_limited=True)
+    macs = sum(l.macs for l in network_stats(net))
+    seconds = t.total / mpna.frequency
+    gops = 2 * macs / seconds / 1e9
+    peak = 2 * (mpna.sa_conv.macs_per_cycle
+                + mpna.sa_fc.macs_per_cycle) * mpna.frequency / 1e9
+    return {"gops": gops, "peak_gops": peak,
+            "utilization": gops / peak,
+            "gops_per_w": gops / mpna.power_w,
+            "latency_ms": seconds * 1e3,
+            "power_w": mpna.power_w}

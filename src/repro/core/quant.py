@@ -1,0 +1,74 @@
+"""int8 weight quantization — the paper's 8-bit fixed-point, as a serving
+feature.
+
+MPNA stores weights in 8-bit fixed point; the SA-FC regime's bound is the
+weight stream, so narrower weights are *throughput* on the bandwidth
+roofline (Table II/III: 12.8 GB/s feeding an 8-bit 8x8 array).  The TPU
+analogue: decode steps read every weight byte once per token — int8
+weights cut the dominant decode memory term ~2x vs bf16 (4x vs f32) at
+<1% logit error (symmetric per-output-channel scales).
+
+`QTensor` is a pytree, so a quantized parameter tree flows through jit /
+shardings / checkpointing unchanged; `repro.core.engine.matmul` detects it
+and dequantizes into the dot (on TPU the convert+scale fuses into the
+matmul read: HBM moves int8)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QTensor(NamedTuple):
+    q: jax.Array          # int8, same shape as the original weight
+    scale: jax.Array      # f32, broadcastable (per-output-channel)
+
+
+def quantize(w: jax.Array, *, axis: int = -1,
+             batch_dims: int = 0) -> QTensor:
+    """Symmetric per-channel int8 quantization along ``axis`` (the output
+    channel — each column gets its own scale, the standard W8 scheme).
+    ``batch_dims`` leading dims keep their extent in the scale (stacked
+    layer weights / per-expert weights: scales stay scannable/shardable
+    along the stack)."""
+    wf = w.astype(jnp.float32)
+    ax = axis % w.ndim
+    reduce_axes = tuple(i for i in range(batch_dims, w.ndim) if i != ax)
+    amax = jnp.max(jnp.abs(wf), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale)
+
+
+def dequantize(qt: QTensor, dtype=jnp.bfloat16) -> jax.Array:
+    return (qt.q.astype(jnp.float32) * qt.scale).astype(dtype)
+
+
+def _is_weight(path, leaf) -> bool:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leafname = names[-1] if names else ""
+    in_norm = any(n.startswith("ln") or "norm" in n for n in names[:-1])
+    return (hasattr(leaf, "ndim") and leaf.ndim >= 2 and not in_norm
+            and leaf.dtype in (jnp.bfloat16, jnp.float32)
+            and leafname in ("wq", "wk", "wv", "wo", "wg", "wu", "wd",
+                             "w1", "w2", "in_proj", "out_proj", "head",
+                             "frontend", "w"))
+
+
+def quantize_params(params: Any) -> Any:
+    """Quantize every matmul weight leaf; embeddings/norms stay as-is
+    (embedding gathers are row-sparse — int8 wins little there)."""
+    def one(path, leaf):
+        if _is_weight(path, leaf):
+            return quantize(leaf, batch_dims=max(0, leaf.ndim - 2))
+        return leaf
+    return jax.tree_util.tree_map_with_path(
+        one, params, is_leaf=lambda x: isinstance(x, QTensor))
+
+
+def quantized_bytes(params: Any) -> int:
+    total = 0
+    for leaf in jax.tree.leaves(params):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

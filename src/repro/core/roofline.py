@@ -1,0 +1,465 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / (chips x 197e12)          [bf16 peak]
+    memory     = HLO_bytes / (chips x 819e9)           [HBM]
+    collective = wire_bytes_per_chip / 50e9            [ICI per link]
+
+Sources: ``compiled.cost_analysis()`` for FLOPs / bytes (CPU backend
+reports the values of the *per-device* SPMD module, verified exact on a
+plain matmul; byte counts are HLO-op-level, i.e. an upper bound vs. perfect
+fusion).  Collective bytes are parsed from the partitioned HLO text —
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute with its result shape and replica-group size, converted
+to per-chip wire bytes with the standard ring-algorithm factors:
+
+    all-reduce      2 (g-1)/g x result_bytes
+    all-gather        (g-1)/g x result_bytes
+    reduce-scatter    (g-1)   x result_bytes      (result is the shard)
+    all-to-all        (g-1)/g x result_bytes
+    collective-permute          result_bytes
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import Counter
+from typing import Dict, Optional
+
+from repro.core.accelerator import TPU_V5E, TPUChip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-$]+)\s+\(.*\)\s*->")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-$]+)\s*=\s*"
+    r"(\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([\w\-$]+)(?:-start)?\(([^)]*)\)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]{0,10}(\d+)')
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-$]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-$]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+_WIRE_FACTOR = {
+    "all-reduce": lambda g: 2.0 * (g - 1) / g,
+    "all-gather": lambda g: (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+_COLL_OPS = set(_WIRE_FACTOR)
+_NO_TRAFFIC_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "conditional", "after-all",
+                   "iota", "partition-id", "replica-id"}
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    entry: bool = False
+    lines: list = dataclasses.field(default_factory=list)
+
+
+def _parse_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        m = _COMP_HDR_RE.match(line)
+        if m and line.rstrip().endswith("{"):
+            cur = _Comp(name=m.group(2), entry=bool(m.group(1)))
+            comps[cur.name] = cur
+        elif cur is not None:
+            if line.strip() == "}":
+                cur = None
+            else:
+                cur.lines.append(line)
+    return comps
+
+
+@dataclasses.dataclass
+class HloCost:
+    """Trip-count-aware per-chip totals parsed from partitioned HLO.
+
+    ``jax.lax.scan`` lowers to a ``while`` whose body XLA's cost_analysis
+    visits ONCE (verified: reported flops identical for 2- vs 8-layer scans)
+    — so every figure here multiplies loop bodies by the
+    ``known_trip_count`` backend_config (nested loops compose:
+    microbatch-accumulation x layer scan).
+    """
+    flops: float = 0.0                       # MXU dot flops, per chip
+    hbm_bytes: float = 0.0                   # post-fusion op-level, per chip
+    wire_bytes: float = 0.0                  # per chip, ring-factored
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    unknown_trip_whiles: int = 0
+
+
+def _is_bf16_emulation(cname, args, instrs, tables, body_pure_convert,
+                       depth: int = 3) -> bool:
+    """Does this collective's payload originate from bf16 (CPU f32
+    emulation)?  Follows the producer chain through converts / pure-convert
+    fusions / copies / dots-on-bf16-operands."""
+    prod = {name: (op_, args_, line_)
+            for name, _, op_, args_, line_ in instrs.get(cname, [])}
+    frontier = _OPERAND_RE.findall(args)
+    for _ in range(depth):
+        nxt = []
+        for o in frontier:
+            p = prod.get(o)
+            if p is None:
+                continue
+            op_, args_, line_ = p
+            ops_in = _OPERAND_RE.findall(args_)
+            in_shapes = [tables[cname].get(i, "") for i in ops_in]
+            if op_ == "convert" or (op_ == "fusion"
+                                    and "convert" in line_):
+                if any(s.startswith("bf16") for s in in_shapes):
+                    return True
+                nxt.extend(ops_in)
+            elif op_ in ("copy", "bitcast", "reshape", "transpose",
+                         "get-tuple-element", "tuple"):
+                nxt.extend(ops_in)
+            elif op_ == "dot":
+                # f32 dot whose operands are (converted) bf16: the TPU
+                # equivalent emits a bf16-accumulated dot per our accum flag
+                if any(s.startswith("bf16") for s in in_shapes):
+                    return True
+                nxt.extend(ops_in)
+        if not nxt:
+            return False
+        frontier = nxt
+    return False
+
+
+def analyze_hlo(text: str) -> HloCost:
+    comps = _parse_computations(text)
+    # instruction symbol tables (name -> shape string) per computation
+    tables: Dict[str, Dict[str, str]] = {}
+    instrs: Dict[str, list] = {}
+    for cname, comp in comps.items():
+        tab, ins = {}, []
+        for line in comp.lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, shape, op, args = m.groups()
+            tab[name] = shape
+            ins.append((name, shape, op, args, line))
+        tables[cname] = tab
+        instrs[cname] = ins
+
+    cost = HloCost()
+
+    # fusion bodies: does the computation slice / update in place?  (the
+    # call-site line often carries unrelated metadata, e.g. the squeeze
+    # that follows a scan xs dynamic-slice)
+    body_has_ds: Dict[str, bool] = {}
+    body_has_dus: Dict[str, bool] = {}
+    body_pure_convert: Dict[str, bool] = {}
+    _CONVERT_ONLY = {"convert", "bitcast", "parameter", "constant",
+                     "get-tuple-element"}
+    for cname, ins in instrs.items():
+        body_has_ds[cname] = any(
+            op_ in ("dynamic-slice", "gather") for _, _, op_, _, _ in ins)
+        body_has_dus[cname] = any(
+            op_ in ("dynamic-update-slice", "scatter")
+            for _, _, op_, _, _ in ins)
+        # CPU emulates bf16: it widens bf16 loop state to f32 with pure
+        # convert computations that do not exist on a TPU backend — zero
+        # HBM traffic for the roofline (see EXPERIMENTS.md §Dry-run notes)
+        body_pure_convert[cname] = bool(ins) and all(
+            op_ in _CONVERT_ONLY for _, _, op_, _, _ in ins)
+
+    # --- while-loop multipliers (fixpoint over nesting) -------------------
+    mult: Dict[str, float] = {c.name: 1.0 for c in comps.values() if c.entry}
+    edges = []                                 # (parent, body, cond, trip)
+    for cname, ins in instrs.items():
+        for name, shape, op, args, line in ins:
+            if op == "while":
+                body = cond = None
+                mb = re.search(r"body=%?([\w.\-$]+)", line)
+                mc = re.search(r"condition=%?([\w.\-$]+)", line)
+                mt = _TRIP_RE.search(line)
+                if mb:
+                    body = mb.group(1)
+                if mc:
+                    cond = mc.group(1)
+                trip = float(mt.group(1)) if mt else 1.0
+                if not mt:
+                    cost.unknown_trip_whiles += 1
+                edges.append((cname, body, cond, trip))
+    for _ in range(len(edges) + 1):
+        changed = False
+        for parent, body, cond, trip in edges:
+            pm = mult.get(parent)
+            if pm is None:
+                continue
+            for tgt, m_ in ((body, pm * trip), (cond, pm * (trip + 1))):
+                if tgt and mult.get(tgt) != m_:
+                    mult[tgt] = m_
+                    changed = True
+        if not changed:
+            break
+
+    # computations whose top-level instructions touch HBM
+    counted = dict(mult)
+
+    # fusion-called computations inherit the caller's multiplier (for the
+    # rare dot living inside a fusion body; bytes stay at the call site)
+    fusion_mult: Dict[str, float] = {}
+    for cname, m_ in counted.items():
+        for _, _, op, args, line in instrs.get(cname, []):
+            mc = _CALLS_RE.search(line)
+            if mc and op in ("fusion", "call"):
+                fusion_mult[mc.group(1)] = max(
+                    fusion_mult.get(mc.group(1), 0.0), m_)
+
+    def dot_flops(cname, name, shape, line, args) -> float:
+        mcon = _CONTRACT_RE.search(line)
+        ops = _OPERAND_RE.findall(args)
+        if not mcon or not ops:
+            return 0.0
+        lhs_shape = tables[cname].get(ops[0])
+        if lhs_shape is None:
+            return 0.0
+        dims = [int(x) for x in mcon.group(1).split(",") if x]
+        mm = _SHAPE_RE.search(lhs_shape)
+        if not mm:
+            return 0.0
+        sizes = [int(x) for x in mm.group(2).split(",") if x]
+        contract = 1
+        for d in dims:
+            if d < len(sizes):
+                contract *= sizes[d]
+        out_elems = 1
+        ms = _SHAPE_RE.search(shape)
+        if ms:
+            for x in ms.group(2).split(","):
+                if x:
+                    out_elems *= int(x)
+        return 2.0 * out_elems * contract
+
+    for cname, m_ in {**fusion_mult, **counted}.items():
+        in_counted = cname in counted
+        for name, shape, op, args, line in instrs.get(cname, []):
+            if op == "dot":
+                cost.flops += m_ * dot_flops(cname, name, shape, line, args)
+            if not in_counted:
+                continue                       # bytes only at call sites
+            if op in _NO_TRAFFIC_OPS:
+                continue
+            out_b = _shape_bytes(shape)
+            opnds = [tables[cname].get(o)
+                     for o in _OPERAND_RE.findall(args)]
+            opnd_b = [(_shape_bytes(s) if s else 0) for s in opnds]
+            total = out_b + sum(opnd_b)
+            callee = None
+            if op in ("fusion", "call"):
+                mcall = _CALLS_RE.search(line)
+                callee = mcall.group(1) if mcall else None
+            if op == "convert" or (callee is not None
+                                   and body_pure_convert.get(callee, False)):
+                total = 0                     # bf16-emulation artifact
+            is_dus = (op in ("dynamic-update-slice", "scatter")
+                      or "dynamic_update_slice" in line
+                      or (callee is not None
+                          and body_has_dus.get(callee, False)))
+            is_ds = (op in ("dynamic-slice", "gather")
+                     or "dynamic_slice" in line
+                     or (callee is not None
+                         and body_has_ds.get(callee, False)))
+
+            def _dims(s: str) -> str:         # "f32[10,8]{...}" -> "10,8"
+                m2 = _SHAPE_RE.search(s)
+                return m2.group(2) if m2 else ""
+
+            # in-place dynamic-update-slice / scatter (cache & grad
+            # writes): the aliased operand does not stream through HBM.
+            # Dims-only match: the CPU backend interposes f32 converts on
+            # bf16 state that a TPU build updates in place.
+            if is_dus and opnd_b and total:
+                big = max(opnd_b)
+                for s, b in zip(opnds, opnd_b):
+                    if b == big and s and _dims(s) == _dims(shape):
+                        # in place: read+write only the inserted region
+                        total = 2 * (sum(opnd_b) - b)
+                        break
+            # dynamic-slice / gather read only the addressed rows, not the
+            # whole operand (embedding lookups, scan xs weight slicing)
+            elif is_ds and total:
+                total = 2 * out_b
+            cost.hbm_bytes += m_ * total
+            if op in _COLL_OPS:
+                g = _group_size(line)
+                if op == "collective-permute":
+                    g = 2
+                if g <= 1:
+                    continue
+                d = cost.collectives.setdefault(
+                    op, {"count": 0, "result_bytes": 0.0, "wire_bytes": 0.0})
+                eff_b = out_b
+                # CPU emulates bf16 dots in f32 (verified: bf16-preferred
+                # dot lowers as convert->f32 dot->all-reduce->convert).  A
+                # TPU build transmits bf16.  When the collective's payload
+                # is an f32 convert-from-bf16 (or is converted straight
+                # back to bf16), cost the wire at bf16 width.
+                if "f32[" in shape and _is_bf16_emulation(
+                        cname, args, instrs, tables, body_pure_convert):
+                    eff_b = out_b // 2
+                wire = eff_b * _WIRE_FACTOR[op](g)
+                d["count"] += m_
+                d["result_bytes"] += m_ * out_b
+                d["wire_bytes"] += m_ * wire
+                cost.wire_bytes += m_ * wire
+    return cost
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    return analyze_hlo(hlo_text).collectives
+
+
+def top_cost_lines(text: str, k: int = 20, by: str = "bytes") -> list:
+    """The dry-run 'profile': largest per-chip contributors (trip-count
+    weighted), with the jax op_name metadata that names the culprit."""
+    comps = _parse_computations(text)
+    tables: Dict[str, Dict[str, str]] = {}
+    instrs: Dict[str, list] = {}
+    for cname, comp in comps.items():
+        tab, ins = {}, []
+        for line in comp.lines:
+            m = _INSTR_RE.match(line)
+            if m:
+                name, shape, op, args = m.groups()
+                tab[name] = shape
+                ins.append((name, shape, op, args, line))
+        tables[cname] = tab
+        instrs[cname] = ins
+    # reuse multiplier logic via analyze on the fly
+    mult: Dict[str, float] = {c.name: 1.0 for c in comps.values() if c.entry}
+    edges = []
+    for cname, ins in instrs.items():
+        for name, shape, op, args, line in ins:
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-$]+)", line)
+                mc = re.search(r"condition=%?([\w.\-$]+)", line)
+                mt = _TRIP_RE.search(line)
+                edges.append((cname, mb and mb.group(1), mc and mc.group(1),
+                              float(mt.group(1)) if mt else 1.0))
+    for _ in range(len(edges) + 1):
+        changed = False
+        for parent, body, cond, trip in edges:
+            pm = mult.get(parent)
+            if pm is None:
+                continue
+            for tgt, m_ in ((body, pm * trip), (cond, pm * (trip + 1))):
+                if tgt and mult.get(tgt) != m_:
+                    mult[tgt] = m_
+                    changed = True
+        if not changed:
+            break
+
+    rows = []
+    for cname, m_ in mult.items():
+        for name, shape, op, args, line in instrs.get(cname, []):
+            if op in _NO_TRAFFIC_OPS:
+                continue
+            out_b = _shape_bytes(shape)
+            opnd_b = sum(_shape_bytes(tables[cname].get(o) or "")
+                         for o in _OPERAND_RE.findall(args))
+            cost = (out_b + opnd_b) * m_
+            meta = re.search(r'op_name="([^"]+)"', line)
+            rows.append((cost, m_, op, shape.split("{")[0][:48],
+                         (meta.group(1) if meta else "")[-90:]))
+    rows.sort(reverse=True)
+    return rows[:k]
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    wire_bytes_per_chip: float
+    chips: int
+    model_flops: float = 0.0            # 6*N*D (or analytic serve flops)
+
+    def compute_s(self, chip: TPUChip = TPU_V5E) -> float:
+        return self.flops_per_chip / chip.peak_flops_bf16
+
+    def memory_s(self, chip: TPUChip = TPU_V5E) -> float:
+        return self.hbm_bytes_per_chip / chip.hbm_bandwidth
+
+    def collective_s(self, chip: TPUChip = TPU_V5E) -> float:
+        return self.wire_bytes_per_chip / chip.ici_link_bandwidth
+
+    def dominant(self, chip: TPUChip = TPU_V5E):
+        terms = {"compute": self.compute_s(chip),
+                 "memory": self.memory_s(chip),
+                 "collective": self.collective_s(chip)}
+        name = max(terms, key=terms.get)
+        return name, terms
+
+    def bound_s(self, chip: TPUChip = TPU_V5E) -> float:
+        """Step-time lower bound = max of the three terms (perfect overlap)."""
+        return max(self.compute_s(chip), self.memory_s(chip),
+                   self.collective_s(chip))
+
+    def useful_flops_fraction(self) -> float:
+        if not self.model_flops:
+            return float("nan")
+        return self.model_flops / (self.flops_per_chip * self.chips)
+
+    def roofline_fraction(self, chip: TPUChip = TPU_V5E) -> float:
+        """MODEL_FLOPs utilization at the bound: what MFU would be if the
+        step ran exactly at max(terms).  The score we hillclimb."""
+        if not self.model_flops:
+            return float("nan")
+        t = self.bound_s(chip)
+        return (self.model_flops / self.chips) / (t * chip.peak_flops_bf16)
+
+
+def terms_from_compiled(compiled, chips: int,
+                        model_flops: float = 0.0) -> RooflineTerms:
+    cost = analyze_hlo(compiled.as_text())
+    return RooflineTerms(flops_per_chip=cost.flops,
+                         hbm_bytes_per_chip=cost.hbm_bytes,
+                         wire_bytes_per_chip=cost.wire_bytes, chips=chips,
+                         model_flops=model_flops)
+
+
+def model_flops_train(n_active_params: int, tokens: int) -> float:
+    return 6.0 * n_active_params * tokens
+
+
+def model_flops_decode(n_active_params: int, tokens: int) -> float:
+    return 2.0 * n_active_params * tokens

@@ -1,0 +1,75 @@
+"""Deterministic, stateless-resumable synthetic data pipeline.
+
+Every batch is a pure function of (seed, step, shard), so a restarted or
+re-sharded job reproduces the exact token stream with no iterator state in
+the checkpoint — the data-side half of fault tolerance.  Tokens follow a
+Zipf-like marginal (realistic softmax losses) with a deterministic
+per-sequence structure so the model has signal to fit in the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_shards: int = 1            # data-parallel host shards
+    shard: int = 0
+
+
+def _zipf_logits(vocab: int) -> np.ndarray:
+    return -np.log(np.arange(1, vocab + 1, dtype=np.float64))
+
+
+class SyntheticLM:
+    """batch_at(step) -> {'tokens': (local_batch, seq)} deterministic."""
+
+    def __init__(self, dc: DataConfig, cfg: Optional[ModelConfig] = None):
+        assert dc.global_batch % dc.n_shards == 0
+        self.dc = dc
+        self.cfg = cfg
+        self.local_batch = dc.global_batch // dc.n_shards
+        probs = np.exp(_zipf_logits(dc.vocab_size) / 1.2)
+        self._probs = jnp.asarray(probs / probs.sum(), jnp.float32)
+
+    def batch_at(self, step: int) -> dict:
+        dc = self.dc
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(dc.seed), step), dc.shard)
+        kz, kp = jax.random.split(key)
+        base = jax.random.choice(kz, dc.vocab_size,
+                                 (self.local_batch, dc.seq_len),
+                                 p=self._probs)
+        # learnable structure: every odd position repeats (prev*2+1) mod V —
+        # a model that trains reduces loss well below the zipf entropy.
+        idx = jnp.arange(dc.seq_len)
+        prev = jnp.roll(base, 1, axis=1)
+        structured = jnp.where((idx % 2 == 1)[None, :],
+                               (prev * 2 + 1) % dc.vocab_size, base)
+        batch = {"tokens": structured.astype(jnp.int32)}
+        if self.cfg is not None and self.cfg.vision_tokens:
+            batch["vision_embeds"] = jax.random.normal(
+                kp, (self.local_batch, self.cfg.vision_tokens,
+                     self.cfg.frontend_dim), jnp.float32)
+        if self.cfg is not None and self.cfg.enc_dec:
+            batch["audio_embeds"] = jax.random.normal(
+                kp, (self.local_batch, self.cfg.audio_frames,
+                     self.cfg.frontend_dim), jnp.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,64 @@
+"""Elastic scaling: re-plan the mesh after node loss and resume.
+
+Checkpoints are mesh-agnostic (logical leaves, repro.checkpoint), so
+elasticity is a *planning* problem: given the surviving chip count,
+propose the best (pod, data, model) mesh that (a) keeps the model-parallel
+degree (weights must still fit), (b) keeps batch divisibility, and (c)
+wastes the fewest survivors.  The trainer then rebuilds shardings for the
+new mesh and restores the same checkpoint — exercised end-to-end (at
+logical scale) in tests/test_elastic.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    pods: int
+    data: int
+    model: int
+    used_chips: int
+    wasted_chips: int
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return (self.pods, self.data, self.model) if self.pods > 1 \
+            else (self.data, self.model)
+
+    @property
+    def axis_names(self) -> Tuple[str, ...]:
+        return ("pod", "data", "model") if self.pods > 1 \
+            else ("data", "model")
+
+
+def replan(surviving_chips: int, *, model_parallel: int = 16,
+           global_batch: int = 256, pod_size: int = 256) -> MeshPlan:
+    """Largest usable mesh under the survivors.
+
+    Keeps `model` fixed (sharded weights must fit exactly as before), and
+    finds the largest power-of-two data degree that divides the batch.
+    """
+    assert surviving_chips >= model_parallel, \
+        "fewer survivors than the model-parallel degree: cannot fit weights"
+    pods = max(1, surviving_chips // pod_size)
+    per_pod = surviving_chips // pods
+    data = 1
+    while (data * 2 * model_parallel <= per_pod
+           and global_batch % (data * 2 * pods) == 0):
+        data *= 2
+    used = pods * data * model_parallel
+    return MeshPlan(pods, data, model_parallel, used,
+                    surviving_chips - used)
+
+
+def degrade_sequence(start_chips: int, failures: List[int],
+                     **kw) -> List[MeshPlan]:
+    """Plans after each failure event (failures = chips lost per event)."""
+    plans = []
+    chips = start_chips
+    for lost in failures:
+        chips -= lost
+        plans.append(replan(chips, **kw))
+    return plans

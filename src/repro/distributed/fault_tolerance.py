@@ -1,0 +1,88 @@
+"""Fault-tolerance primitives: straggler detection, step deadlines,
+heartbeat bookkeeping.
+
+On a real multi-pod fleet these hooks attach to the launcher's control
+plane (GCS health service / SLURM prolog); the policy logic — what counts
+as a straggler, when a hang becomes a restart, which pods survive a
+degraded remesh — is hardware-independent and lives here, unit-tested on
+CPU.  ``repro.distributed.elastic`` consumes the survivor set to re-plan
+the mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+
+class StepMonitor:
+    """Flags steps whose wall time exceeds ``factor`` x running median."""
+
+    def __init__(self, factor: float = 3.0, warmup: int = 5,
+                 window: int = 50):
+        self.factor = factor
+        self.warmup = warmup
+        self.window = window
+        self._times: List[float] = []
+
+    def median(self) -> float:
+        if not self._times:
+            return float("nan")
+        s = sorted(self._times)
+        return s[len(s) // 2]
+
+    def observe(self, step: int, dt: float) -> str:
+        verdict = "ok"
+        if len(self._times) >= self.warmup and dt > self.factor * self.median():
+            verdict = "straggler"
+        else:
+            self._times.append(dt)
+            self._times = self._times[-self.window:]
+        return verdict
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    node: str
+    last_seen: float
+
+
+class HeartbeatTracker:
+    """Deadline-based liveness: a node missing ``timeout`` seconds of
+    heartbeats is declared failed; the surviving set feeds elastic remesh."""
+
+    def __init__(self, nodes: List[str], timeout: float = 60.0):
+        now = time.monotonic()
+        self.timeout = timeout
+        self._beats: Dict[str, Heartbeat] = {
+            n: Heartbeat(n, now) for n in nodes}
+
+    def beat(self, node: str, now: Optional[float] = None) -> None:
+        self._beats[node].last_seen = now if now is not None \
+            else time.monotonic()
+
+    def failed(self, now: Optional[float] = None) -> List[str]:
+        now = now if now is not None else time.monotonic()
+        return [n for n, hb in self._beats.items()
+                if now - hb.last_seen > self.timeout]
+
+    def survivors(self, now: Optional[float] = None) -> List[str]:
+        dead = set(self.failed(now))
+        return [n for n in self._beats if n not in dead]
+
+
+class StepDeadline:
+    """Converts a hung step (dead collective) into a restart decision."""
+
+    def __init__(self, deadline_s: float):
+        self.deadline_s = deadline_s
+        self._start: Optional[float] = None
+
+    def begin(self) -> None:
+        self._start = time.monotonic()
+
+    def expired(self, now: Optional[float] = None) -> bool:
+        if self._start is None:
+            return False
+        now = now if now is not None else time.monotonic()
+        return (now - self._start) > self.deadline_s

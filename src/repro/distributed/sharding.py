@@ -1,0 +1,282 @@
+"""Sharding rules: DP / FSDP(ZeRO) / TP / EP / SP over the production mesh.
+
+Mesh axes (assignment-fixed): single-pod ``('data','model')`` = (16,16);
+multi-pod ``('pod','data','model')`` = (2,16,16).  Data parallelism runs
+over ``('pod','data')``; tensor parallelism over ``'model'``.
+
+Parameter layout is 2-D "FSDP + TP": every matrix shards its TP dim over
+``model`` per the Megatron pattern (qkv/gate/up column-wise, o/down
+row-wise) *and* its other dim over ``data`` (ZeRO-3 — parameters,
+gradients and Adam moments all 256-way sharded; XLA all-gathers weights
+layer-by-layer inside the scan, which is what overlaps the gather of layer
+l+1 with compute of layer l).
+
+MoE experts: expert axis over ``model`` when divisible (llama4 128e -> EP,
+the all-to-all emerges from the dispatch einsum), else TP-within-expert
+(mixtral 8e shards ff).  Mamba blocks: FSDP only (head counts don't divide
+the TP axis; they are <4%% of hybrid-arch FLOPs).
+
+Serving caches: batch over DP when divisible, else **sequence over DP**
+(the long_500k cells: 500k-token KV sharded across 16 chips, softmax
+reductions over the sharded axis become jnp reductions GSPMD turns into
+all-reduces — sequence parallelism without custom collectives).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def tp_size(mesh: Mesh) -> int:
+    return mesh.shape.get("model", 1)
+
+
+def _fsdp(mesh: Mesh, dim: int, spec: list, shape) -> None:
+    """Shard dim over the data axis if divisible (ZeRO)."""
+    if spec[dim] is None and shape[dim] % mesh.shape.get("data", 1) == 0 \
+            and mesh.shape.get("data", 1) > 1:
+        spec[dim] = "data"
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def _param_spec(cfg: ModelConfig, mesh: Mesh, path: Tuple[str, ...],
+                shape: Tuple[int, ...]) -> P:
+    tp = tp_size(mesh)
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    leaf = names[-1]
+    if leaf in ("q", "scale") and len(names) >= 2:
+        leaf = names[-2]                   # int8 QTensor: rules of the weight
+    stacked = "blocks" in names or ("encoder" in names)
+    off = 1 if stacked and len(shape) >= 2 else 0
+    spec: list = [None] * len(shape)
+
+    def col(dim):        # TP column-parallel (output dim sharded)
+        if shape[dim] % tp == 0 and tp > 1:
+            spec[dim] = "model"
+
+    def row(dim):        # TP row-parallel (input dim sharded)
+        if shape[dim] % tp == 0 and tp > 1:
+            spec[dim] = "model"
+
+    in_moe = "moe" in names
+    if leaf == "embed":
+        col(0)                                   # vocab over model
+        _fsdp(mesh, 1, spec, shape)
+    elif leaf in ("head", "frontend"):
+        col(1)
+        _fsdp(mesh, 0, spec, shape)
+    elif in_moe and leaf in ("wg", "wu", "wd") and len(shape) - off == 3:
+        E = shape[off]
+        if E % tp == 0:                          # EP: experts over model
+            spec[off] = "model"
+            _fsdp(mesh, off + 1, spec, shape)
+        else:                                    # TP within expert
+            ff_dim = off + 2 if leaf in ("wg", "wu") else off + 1
+            col(ff_dim)
+            _fsdp(mesh, off + (1 if leaf in ("wg", "wu") else 2),
+                  spec, shape)
+    elif leaf == "router":
+        _fsdp(mesh, off, spec, shape)
+    elif leaf in ("wq", "wk", "wv", "wg", "wu", "w1"):
+        col(off + 1)
+        _fsdp(mesh, off, spec, shape)
+    elif leaf in ("wo", "wd", "w2", "out_proj"):
+        row(off)
+        _fsdp(mesh, off + 1, spec, shape)
+    elif leaf == "in_proj":                      # mamba: FSDP only
+        _fsdp(mesh, off, spec, shape)
+    elif leaf == "w" and len(shape) - off == 2:  # cnn fc etc.
+        col(off + 1)
+        _fsdp(mesh, off, spec, shape)
+    # 1-D leaves (norms, biases, dt_bias, a_log, conv) stay replicated
+    return P(*spec)
+
+
+def param_shardings(cfg: ModelConfig, params_shapes: Any,
+                    mesh: Mesh, *, serve: bool = False) -> Any:
+    """params_shapes: pytree of ShapeDtypeStruct/arrays -> NamedShardings.
+
+    serve=True drops the FSDP (data-axis) dim when TP-sharded bf16 weights
+    fit in HBM — otherwise every decode step re-gathers weights over the
+    data axis.  405B-class models keep the 2-D layout (capacity bound)."""
+    if serve:
+        fits = cfg.n_params() * 2 / tp_size(mesh) < 12 * 2**30
+        if fits:
+            nofsdp = dataclass_mesh_without_fsdp(mesh)
+            def one_s(path, leaf):
+                spec = _param_spec(cfg, nofsdp, path, leaf.shape)
+                return NamedSharding(mesh, spec)
+            return jax.tree_util.tree_map_with_path(one_s, params_shapes)
+
+    def one(path, leaf):
+        return NamedSharding(
+            mesh, _param_spec(cfg, mesh, path, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+class dataclass_mesh_without_fsdp:
+    """Mesh proxy that reports data-axis size 1 so _fsdp() no-ops."""
+
+    def __init__(self, mesh: Mesh):
+        self._mesh = mesh
+
+    @property
+    def shape(self):
+        d = dict(self._mesh.shape)
+        d["data"] = 1
+        d.pop("pod", None)
+        return d
+
+    @property
+    def axis_names(self):
+        return self._mesh.axis_names
+
+
+def opt_shardings(cfg: ModelConfig, opt_shapes: Any, mesh: Mesh) -> Any:
+    """Adam moments follow the parameters; step counter replicated."""
+    def one(path, leaf):
+        if len(leaf.shape) == 0:
+            return NamedSharding(mesh, P())
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        # moments live under .m/.v with the same sub-path as params
+        sub = tuple(p for p in path
+                    if getattr(p, "name", None) not in ("m", "v"))
+        return NamedSharding(mesh, _param_spec(cfg, mesh, sub, leaf.shape))
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+# ---------------------------------------------------------------------------
+# batches & caches
+# ---------------------------------------------------------------------------
+def batch_shardings(mesh: Mesh, batch_shapes: Any) -> Any:
+    dp = dp_axes(mesh)
+    n_dp = dp_size(mesh)
+
+    def one(leaf):
+        if leaf.shape and leaf.shape[0] % n_dp == 0 and n_dp > 1:
+            return NamedSharding(mesh, P(dp, *([None] * (len(leaf.shape) - 1))))
+        return NamedSharding(mesh, P(*([None] * len(leaf.shape))))
+    return jax.tree.map(one, batch_shapes)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shapes: Any) -> Any:
+    """Decode-cache shardings.  Leaves are stacked (reps, B, ...):
+    * k/v (reps,B,S,h,hd): B over DP if divisible else S over DP (SP);
+      h over model if divisible else hd.
+    * mamba conv (reps,B,cw-1,ch): ch over model; h-state (reps,B,H,hd,N):
+      hd over model when divisible.
+    """
+    dp = dp_axes(mesh)
+    n_dp = dp_size(mesh)
+    tp = tp_size(mesh)
+
+    def one(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", str(k)))
+                 for k in path]
+        shape = leaf.shape
+        stacked = "main" in names
+        off = 1 if stacked else 0
+        spec: list = [None] * len(shape)
+        leafname = names[-1]
+        if leafname in ("k", "v", "xk", "xv"):
+            bdim, sdim, hdim, ddim = off, off + 1, off + 2, off + 3
+            s_axes: list = []
+            if shape[bdim] % n_dp == 0 and n_dp > 1:
+                spec[bdim] = dp
+            elif shape[sdim] % n_dp == 0 and n_dp > 1:
+                s_axes.extend(dp)                  # sequence parallelism
+            if shape[hdim] % tp == 0 and tp > 1:
+                spec[hdim] = "model"
+            elif tp > 1 and shape[sdim] % (tp * max(1, len(s_axes)
+                                           and n_dp)) == 0:
+                s_axes.append("model")             # kv-heads don't divide:
+                # shard the cache sequence over TP instead (decode attends
+                # a seq-sharded cache; softmax reduces via psum)
+            if s_axes:
+                spec[sdim] = tuple(s_axes)
+        elif leafname == "conv":
+            if shape[off] % n_dp == 0 and n_dp > 1:
+                spec[off] = dp
+            if shape[-1] % tp == 0 and tp > 1:
+                spec[-1] = "model"
+        elif leafname == "h":
+            if shape[off] % n_dp == 0 and n_dp > 1:
+                spec[off] = dp
+            if shape[off + 2] % tp == 0 and tp > 1:
+                spec[off + 2] = "model"
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def replicated(mesh: Mesh, shapes: Any) -> Any:
+    return jax.tree.map(
+        lambda l: NamedSharding(mesh, P(*([None] * len(l.shape)))), shapes)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (model-internal)
+# ---------------------------------------------------------------------------
+# GSPMD occasionally loses a sharding across reshapes (the classic case:
+# (B,S,H*hd) -> (B,S,H,hd) drops the head sharding and silently REPLICATES
+# attention across the model axis — 16x redundant compute, observed in the
+# first olmo dry-run).  Model code pins the intent with logical constraints;
+# 'dp' expands to the present data axes, 'tp' to 'model'.  Outside a mesh
+# context constraints are no-ops, so single-device tests are unaffected.
+_MESH_CTX = threading.local()
+
+
+@contextlib.contextmanager
+def activation_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_MESH_CTX, "mesh", None)
+    _MESH_CTX.mesh = mesh
+    try:
+        yield
+    finally:
+        _MESH_CTX.mesh = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_MESH_CTX, "mesh", None)
+
+
+def constrain(x: jax.Array, spec: Tuple[Optional[str], ...]) -> jax.Array:
+    """spec entries: 'dp' | 'tp' | None, one per dim (len must match)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    assert len(spec) == x.ndim, (spec, x.shape)
+    out = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "dp":
+            axes = dp_axes(mesh)
+            n = dp_size(mesh)
+            out.append(axes if axes and dim % n == 0 and n > 1 else None)
+        elif ax == "tp":
+            n = tp_size(mesh)
+            out.append("model" if dim % n == 0 and n > 1 else None)
+        else:
+            out.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*out)))

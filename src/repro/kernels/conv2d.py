@@ -1,0 +1,45 @@
+"""CONV layers through the SA-CONV array (paper Fig. 5 loop nest).
+
+MPNA executes convolution on the systolic array by mapping the
+(I x P x Q) contraction onto the K rows and the J output channels onto the
+L columns — i.e., convolution as GEMM.  We do the same: an im2col patch
+extraction (pure data movement, fused by XLA) followed by the
+:func:`repro.kernels.sa_conv.sa_conv_matmul` Pallas kernel, so the CONV and
+FC paths share the accumulation + fused-epilogue machinery exactly as the
+two arrays share the accumulation unit in Fig. 7.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sa_conv import sa_conv_matmul
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act", "interpret"))
+def conv2d_mpna(x: jax.Array, f: jax.Array,
+                bias: Optional[jax.Array] = None, *,
+                stride: int = 1, act: str = "none",
+                interpret: bool = True) -> jax.Array:
+    """NHWC x HWIO VALID convolution on the SA-CONV dataflow.
+
+    x: (N, H, W, I);  f: (P, Q, I, J)  ->  (N, M, Nw, J)
+    """
+    n, h, w, i = x.shape
+    p, q, i2, j = f.shape
+    assert i == i2
+    oh, ow = (h - p) // stride + 1, (w - q) // stride + 1
+
+    # im2col: (N, OH, OW, I*P*Q) patches — the input-buffer address generator
+    patches = jax.lax.conv_general_dilated_patches(
+        x, (p, q), (stride, stride), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    # conv_general_dilated_patches yields feature order (I, P, Q) flattened
+    lhs = patches.reshape(n * oh * ow, i * p * q)
+    rhs = jnp.transpose(f, (2, 0, 1, 3)).reshape(i * p * q, j)
+
+    out = sa_conv_matmul(lhs, rhs, bias, act=act, interpret=interpret)
+    return out.reshape(n, oh, ow, j)

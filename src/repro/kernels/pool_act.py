@@ -1,0 +1,64 @@
+"""Fused MaxPool -> activation Pallas kernel (paper Fig. 7F-I).
+
+The paper's pooling & activation unit applies the activation *after*
+MaxPool — valid for monotonically increasing activations (ReLU,
+Leaky-ReLU) and cutting activation-function evaluations by the pool window
+area.  We implement the same operator reordering as one fused VMEM pass:
+each grid step loads an input tile, reduces the pool windows via
+``window**2`` strided shifted-max slices (static, fully vectorized), applies
+the activation to the *pooled* tile, and writes it out — one HBM read and
+one (window^2-times smaller) HBM write per element.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+
+def _pool_act_kernel(x_ref, o_ref, *, window: int, stride: int, act: str):
+    x = x_ref[...]                       # (1, h, w, bc)
+    _, h, w, bc = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    out = None
+    for p in range(window):
+        for q in range(window):
+            sl = jax.lax.slice(
+                x, (0, p, q, 0),
+                (1, p + (oh - 1) * stride + 1, q + (ow - 1) * stride + 1, bc),
+                (1, stride, stride, 1))
+            out = sl if out is None else jnp.maximum(out, sl)
+    o_ref[...] = ref.apply_act(out, act).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "stride", "act", "bc",
+                                    "interpret"))
+def maxpool_act(x: jax.Array, *, window: int = 2, stride: int = 2,
+                act: str = "relu", bc: int = 128,
+                interpret: bool = True) -> jax.Array:
+    """(N,H,W,C) -> (N,OH,OW,C) fused maxpool+activation."""
+    n, h, w, c = x.shape
+    oh = (h - window) // stride + 1
+    ow = (w - window) // stride + 1
+    bc = min(bc, c)
+    if c % bc:                                    # pad channels to tile
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, bc - c % bc)),
+                    constant_values=-jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else 0)
+    cp = x.shape[-1]
+
+    out = pl.pallas_call(
+        functools.partial(_pool_act_kernel, window=window, stride=stride,
+                          act=act),
+        grid=(n, cp // bc),
+        in_specs=[pl.BlockSpec((1, h, w, bc), lambda i, j: (i, 0, 0, j))],
+        out_specs=pl.BlockSpec((1, oh, ow, bc), lambda i, j: (i, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, cp), x.dtype),
+        interpret=interpret,
+    )(x)
+    return out[..., :c]

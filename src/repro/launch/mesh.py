@@ -1,0 +1,22 @@
+"""Production mesh construction (assignment-fixed shapes).
+
+A FUNCTION, not a module-level constant: importing this module never
+touches jax device state (device count is locked at first jax init, and
+only ``launch/dryrun.py`` may set the 512-device XLA flag).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(tp: int = 1) -> jax.sharding.Mesh:
+    """Degenerate mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    assert n % tp == 0
+    return jax.make_mesh((n // tp, tp), ("data", "model"))

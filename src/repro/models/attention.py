@@ -1,0 +1,200 @@
+"""Attention blocks: GQA, sliding-window (ring KV cache), logit softcap,
+cross-attention (enc-dec).
+
+Train/prefill attention goes through :func:`repro.core.engine.attention`
+(flash kernel or jnp oracle).  Decode attends a query of one token against
+the cache with an explicit validity mask — global layers keep a full-length
+cache, ATTN_LOCAL layers keep a **ring cache of size == window**, which is
+what bounds KV memory for the 500k-context cells (mixtral/gemma local
+layers: O(window), not O(S))."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.distributed.sharding import constrain
+from repro.kernels.ref import repeat_kv
+from repro.models.layers import dense_init, rope
+
+
+def init_attn(cfg, key, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(kq, d, cfg.n_heads * hd, dtype),
+        "wk": dense_init(kk, d, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, d, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, d, dtype),
+    }
+
+
+def _proj_qkv(cfg, p, x, x_kv=None):
+    b, s, _ = x.shape
+    hd = cfg.hd
+    xkv = x if x_kv is None else x_kv
+    skv = xkv.shape[1]
+    q = engine.matmul(x, p["wq"], name="attn.q").reshape(b, s, cfg.n_heads, hd)
+    k = engine.matmul(xkv, p["wk"], name="attn.k").reshape(
+        b, skv, cfg.n_kv_heads, hd)
+    v = engine.matmul(xkv, p["wv"], name="attn.v").reshape(
+        b, skv, cfg.n_kv_heads, hd)
+    # pin head sharding across the reshape (see sharding.constrain docstring)
+    q = _constrain_q(cfg, q)
+    k = _constrain_kv(cfg, k)
+    v = _constrain_kv(cfg, v)
+    return q, k, v
+
+
+def _pad_heads(cfg, q):
+    """Pad query heads to a multiple of the TP degree (llava: 56 -> 64,
+    llama4: 40 -> 48) so the head axis shards cleanly.  The zero heads'
+    outputs are sliced off before wo; ~14% extra attention FLOPs beats the
+    16x replication GSPMD falls back to otherwise (§Perf hillclimb #1).
+    The GQA group stays integral because hkv | tp-padded hq."""
+    from repro.distributed import sharding as SH
+    mesh = SH.active_mesh()
+    if mesh is None:
+        return q, q.shape[2]
+    tp = SH.tp_size(mesh)
+    hq = q.shape[2]
+    if hq % tp == 0 or tp == 1:
+        return q, hq
+    hpad = ((hq + tp - 1) // tp) * tp
+    hkv = cfg.n_kv_heads
+    if hkv and hpad % hkv != 0:
+        hpad = ((hpad + hkv - 1) // hkv) * hkv     # keep GQA group integral
+        if hpad % tp:
+            return q, hq                           # give up: fall back
+    q = jnp.pad(q, ((0, 0), (0, 0), (0, hpad - hq), (0, 0)))
+    return q, hq
+
+
+def _constrain_q(cfg, q):
+    """Heads over TP when divisible; else shard the query sequence over TP
+    (context parallelism)."""
+    from repro.distributed import sharding as SH
+    mesh = SH.active_mesh()
+    if mesh is None:
+        return q
+    tp = SH.tp_size(mesh)
+    if q.shape[2] % tp == 0:
+        return constrain(q, ("dp", None, "tp", None))
+    if q.shape[1] % tp == 0 and q.shape[1] > 1:
+        return constrain(q, ("dp", "tp", None, None))
+    return constrain(q, ("dp", None, None, None))
+
+
+def _constrain_kv(cfg, k):
+    from repro.distributed import sharding as SH
+    mesh = SH.active_mesh()
+    if mesh is None:
+        return k
+    tp = SH.tp_size(mesh)
+    if k.shape[2] % tp == 0:
+        return constrain(k, ("dp", None, "tp", None))
+    return constrain(k, ("dp", None, None, None))
+
+
+def masked_attention(q, k, v, kv_mask, *, softcap: float = 0.0,
+                     scale: Optional[float] = None):
+    """Decode attention: q (b,1,hq,d) vs cache k/v (b,S,hkv,d) with an
+    explicit per-slot validity mask (b? S) — position order is irrelevant
+    once RoPE is burned into the cached keys."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    # storage-dtype operands + f32 accumulation: never materialize an f32
+    # copy of the cache (dominant decode HBM term)
+    qg = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if kv_mask.ndim == 1:
+        kv_mask = kv_mask[None]
+    logits = jnp.where(kv_mask[:, None, None, None, :], logits, -1e30)
+    pmax = jnp.max(logits, -1, keepdims=True)
+    un = jnp.exp(logits - pmax)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", un.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    den = jnp.sum(un, -1)[..., None]
+    out = out / jnp.maximum(den.reshape(b, sq, hkv, g, 1), 1e-30)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attn_forward(cfg, p: dict, x: jax.Array, pos_ids: jax.Array, *,
+                 window: int = 0, use_rope: bool = True,
+                 causal: bool = True,
+                 x_kv: Optional[jax.Array] = None,
+                 softcap: Optional[float] = None,
+                 return_kv: bool = False):
+    """Full-sequence (train / prefill) attention."""
+    b, s, _ = x.shape
+    q, k, v = _proj_qkv(cfg, p, x, x_kv)
+    if use_rope:
+        q = rope(q, pos_ids, cfg.rope_theta)
+        k = rope(k, pos_ids if x_kv is None else
+                 jnp.arange(x_kv.shape[1]), cfg.rope_theta)
+    sc = cfg.attn_softcap if softcap is None else softcap
+    q, hq = _pad_heads(cfg, q)
+    q = _constrain_q(cfg, q)
+    out = engine.attention(q, k, v, causal=causal, window=window, softcap=sc)
+    out = out[:, :, :hq, :]                      # drop padded heads
+    out = engine.matmul(out.reshape(b, s, -1), p["wo"], name="attn.o")
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def init_kv_cache(cfg, batch: int, max_seq: int, window: int,
+                  dtype) -> dict:
+    size = min(window, max_seq) if window > 0 else max_seq
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attn_decode(cfg, p: dict, x: jax.Array, pos: jax.Array, cache: dict, *,
+                window: int = 0,
+                cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
+                softcap: Optional[float] = None):
+    """One-token decode step.  x: (b,1,d); pos: scalar int32.
+
+    Self-attention: project k/v for the new token, write into the (ring)
+    cache, attend against every valid slot.  Cross-attention: attend the
+    precomputed encoder k/v, cache untouched."""
+    b = x.shape[0]
+    hd = cfg.hd
+    sc = cfg.attn_softcap if softcap is None else softcap
+
+    q = engine.matmul(x, p["wq"], name="attn.q").reshape(b, 1, cfg.n_heads, hd)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        kv_mask = jnp.ones((k.shape[1],), bool)
+        out = masked_attention(q, k, v, kv_mask, softcap=sc)
+        out = engine.matmul(out.reshape(b, 1, -1), p["wo"], name="attn.o")
+        return out, cache
+
+    posv = jnp.full((b, 1), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k_new = engine.matmul(x, p["wk"], name="attn.k").reshape(
+        b, 1, cfg.n_kv_heads, hd)
+    v_new = engine.matmul(x, p["wv"], name="attn.v").reshape(
+        b, 1, cfg.n_kv_heads, hd)
+    k_new = rope(k_new, posv, cfg.rope_theta)
+
+    size = cache["k"].shape[1]
+    slot = pos % size if window > 0 else pos
+    kc = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    vc = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(size)
+    kv_mask = jnp.where(pos >= size, jnp.ones((size,), bool), idx <= pos)
+    out = masked_attention(q, kc, vc, kv_mask, softcap=sc)
+    out = engine.matmul(out.reshape(b, 1, -1), p["wo"], name="attn.o")
+    return out, {"k": kc, "v": vc}

@@ -1,0 +1,111 @@
+"""Elementary model layers (norms, RoPE, embeddings, inits).
+
+All dense projections go through :func:`repro.core.engine.matmul` so the
+MPNA heterogeneous dispatch sees every matmul in every architecture.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(key, fan_in: int, fan_out: int, dtype) -> jax.Array:
+    std = fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, (fan_in, fan_out),
+                                        jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    # d^-0.5 keeps tied-head logits O(1) (gemma-style sqrt(d) lookup
+    # scaling restores unit activations at the input side)
+    return (jax.random.truncated_normal(key, -3, 3, (vocab, d), jnp.float32)
+            * d ** -0.5).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x: jax.Array, w: Optional[jax.Array], eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    if w is not None:
+        nrm = nrm * (1.0 + w.astype(jnp.float32))
+    return nrm.astype(x.dtype)
+
+
+def layernorm(x: jax.Array, w: Optional[jax.Array],
+              b: Optional[jax.Array], eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    if w is not None:
+        out = out * w.astype(jnp.float32)
+    if b is not None:
+        out = out + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(cfg, p: Optional[dict], x: jax.Array) -> jax.Array:
+    """cfg.norm selects rmsnorm / layernorm / olmo's non-parametric LN."""
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"] if p else None)
+    if cfg.norm == "layernorm":
+        return layernorm(x, p["w"] if p else None, p["b"] if p else None)
+    if cfg.norm == "nonparam_ln":      # olmo: LN without learnable params
+        return layernorm(x, None, None)
+    raise ValueError(cfg.norm)
+
+
+def norm_params(cfg, key, d: int) -> Optional[dict]:
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.zeros((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        return {"w": jnp.ones((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+    return {}                           # nonparam_ln
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (b, s, h, d) with even d; positions: (b, s) or (s,)."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (b, s, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+def embed(params, tokens: jax.Array, *, scale: bool, d: int,
+          dtype) -> jax.Array:
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+    if scale:                           # gemma family scales by sqrt(d)
+        x = x * jnp.asarray(d ** 0.5, dtype)
+    return x
+
+
+def unembed(cfg, params, x: jax.Array) -> jax.Array:
+    w = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = engine.matmul(x, w, name="lm_head", out_dtype=jnp.float32)
+    if cfg.logit_softcap > 0.0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

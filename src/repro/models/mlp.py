@@ -1,0 +1,29 @@
+"""Dense feed-forward blocks (swiglu / geglu / gelu)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.models.layers import dense_init
+
+
+def init_mlp(cfg, key, d: int, ff: int, dtype) -> dict:
+    if cfg.mlp in ("swiglu", "geglu"):
+        kg, ku, kd = jax.random.split(key, 3)
+        return {"wg": dense_init(kg, d, ff, dtype),
+                "wu": dense_init(ku, d, ff, dtype),
+                "wd": dense_init(kd, ff, d, dtype)}
+    k1, k2 = jax.random.split(key)
+    return {"w1": dense_init(k1, d, ff, dtype),
+            "w2": dense_init(k2, ff, d, dtype)}
+
+
+def mlp(cfg, p: dict, x: jax.Array, name: str = "mlp") -> jax.Array:
+    if cfg.mlp in ("swiglu", "geglu"):
+        act = "silu" if cfg.mlp == "swiglu" else "gelu"
+        g = engine.matmul(x, p["wg"], act=act, name=f"{name}.gate")
+        u = engine.matmul(x, p["wu"], name=f"{name}.up")
+        return engine.matmul(g * u, p["wd"], name=f"{name}.down")
+    h = engine.matmul(x, p["w1"], act="gelu", name=f"{name}.fc1")
+    return engine.matmul(h, p["w2"], name=f"{name}.fc2")

@@ -1,0 +1,227 @@
+"""Mixture-of-Experts block (Switch-style capacity dispatch).
+
+Top-k routing with a static capacity per expert, expressed as one-hot
+dispatch/combine einsums so that *expert parallelism is a sharding
+decision*: the stacked expert weights (E, d, ff) shard their E axis over
+the `model` mesh axis (llama4: 128 experts / 16 shards) and XLA emits the
+all-to-all for the (tokens -> experts) exchange; for small expert counts
+(mixtral: 8) the ff axis shards instead (TP-within-expert).  The expert
+matmuls themselves are the extreme SA-FC regime in decode (tokens/expert
+~ B·k/E, weight reuse per expert far below one full sample) — the engine
+records them for the dispatch trace.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dataflow, engine
+from repro.models.layers import dense_init
+from repro.models.mlp import init_mlp, mlp
+
+
+def init_moe(cfg, key, d: int, ff: int, dtype) -> dict:
+    m = cfg.moe
+    kr, ke, ks = jax.random.split(key, 3)
+    kg, ku, kd = jax.random.split(ke, 3)
+    E = m.n_experts
+    std = d ** -0.5
+    p = {
+        "router": dense_init(kr, d, E, jnp.float32),
+        "wg": (jax.random.truncated_normal(kg, -3, 3, (E, d, ff), jnp.float32)
+               * std).astype(dtype),
+        "wu": (jax.random.truncated_normal(ku, -3, 3, (E, d, ff), jnp.float32)
+               * std).astype(dtype),
+        "wd": (jax.random.truncated_normal(kd, -3, 3, (E, ff, d), jnp.float32)
+               * (ff ** -0.5)).astype(dtype),
+    }
+    if m.shared_expert:
+        p["shared"] = init_mlp(cfg, ks, d, ff, dtype)
+    return p
+
+
+def _capacity(tokens: int, cfg) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens * m.top_k * m.capacity_factor / m.n_experts)
+    return max(4, min(tokens, ((c + 3) // 4) * 4))
+
+
+# Above this token count the one-hot (T,E,C) dispatch einsums (memory
+# O(T^2 k cf / E)) switch to the sort/scatter path (memory O(TkE + ECd)).
+_EINSUM_DISPATCH_MAX_T = 8192
+
+
+def _route(cfg, p, xf, name):
+    """Shared router: returns (vals (T,k), idx (T,k), aux loss)."""
+    m = cfg.moe
+    E, k = m.n_experts, m.top_k
+    logits = engine.matmul(xf.astype(jnp.float32), p["router"],
+                           name=f"{name}.router", out_dtype=jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    vals, idx = jax.lax.top_k(gates, k)
+    vals = vals / jnp.sum(vals, -1, keepdims=True)
+    top1 = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    aux = E * jnp.sum(jnp.mean(top1, 0) * jnp.mean(gates, 0))
+    return vals, idx, aux
+
+
+def _position_in_expert(idx: jax.Array, E: int) -> jax.Array:
+    """idx: (T,k) expert choices -> (T,k) arrival position within each
+    expert's queue, choice-major priority (all first choices first)."""
+    T, k = idx.shape
+    flat_e = jnp.transpose(idx, (1, 0)).reshape(k * T)        # choice-major
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)       # (kT, E)
+    pos_all = jnp.cumsum(onehot, axis=0) - onehot
+    pos_flat = jnp.take_along_axis(pos_all, flat_e[:, None], 1)[:, 0]
+    return jnp.transpose(pos_flat.reshape(k, T), (1, 0))      # (T, k)
+
+
+def _w(p, key, cd):
+    """Expert weight fetch, dequantizing int8 QTensors on the fly."""
+    from repro.core.quant import QTensor, dequantize
+    w = p[key]
+    if isinstance(w, QTensor):
+        return dequantize(w, cd)
+    return w.astype(cd)
+
+
+def _expert_ffn(cfg, p, xe, name):
+    """xe: (E, C, d) -> (E, C, d) through the per-expert SwiGLU/GeGLU."""
+    cd = xe.dtype
+    wg = _w(p, "wg", cd)
+    engine._record(name=f"{name}.experts",
+                   regime=dataflow.classify_regime(
+                       xe.shape[1], wg.shape[-1], xe.shape[-1]),
+                   m=xe.shape[1], n=wg.shape[-1], k=xe.shape[-1],
+                   case=0, backend="xla")
+    act = "silu" if cfg.mlp == "swiglu" else "gelu"
+    g = jnp.einsum("ecd,edf->ecf", xe, wg)
+    u = jnp.einsum("ecd,edf->ecf", xe, _w(p, "wu", cd))
+    from repro.kernels.ref import apply_act
+    h = apply_act(g.astype(jnp.float32), act).astype(cd) * u
+    return jnp.einsum("ecf,efd->ecd", h, _w(p, "wd", cd))
+
+
+def _moe_einsum(cfg, p, xf, vals, idx, C, name):
+    """One-hot dispatch/combine (small T: decode steps, tests)."""
+    m = cfg.moe
+    T, d = xf.shape
+    E, k = m.n_experts, m.top_k
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)
+    pos = _position_in_expert(idx, E)[..., None]              # (T, k, 1)
+    pos_e = jnp.where(onehot > 0, pos, C)                     # (T, k, E)
+    keep = (pos_e < C) * onehot
+    slot = jax.nn.one_hot(jnp.minimum(pos_e, C - 1).astype(jnp.int32),
+                          C, dtype=jnp.float32)
+    dispatch = jnp.einsum("tke,tkec->tec", keep, slot)
+    combine = jnp.einsum("tk,tke,tkec->tec", vals, keep, slot)
+    cd = xf.dtype
+    xe = jnp.einsum("tec,td->ecd", dispatch.astype(cd), xf)
+    ye = _expert_ffn(cfg, p, xe, name)
+    return jnp.einsum("tec,ecd->td", combine.astype(cd), ye)
+
+
+def _moe_scatter(cfg, p, xf, vals, idx, C, name):
+    """Scatter/gather dispatch for one group — linear memory."""
+    return _moe_scatter_grouped(cfg, p, xf[None], vals[None], idx[None],
+                                C, name)[0]
+
+
+def _moe_scatter_grouped(cfg, p, xg, vals, idx, C, name):
+    """Grouped scatter dispatch: xg (G,Tg,d), groups == DP shards.
+
+    The expert buffer is (G, E, C, d) with G sharded over DP and the
+    scatter offset-based (group g writes slots [g*E*C, (g+1)*E*C)), so the
+    token->slot exchange never crosses shards (the first mixtral prefill
+    dry-run showed GSPMD all-gathering the whole 40 GB buffer instead).
+    The only structural collective left for TP-sharded experts is the
+    down-projection psum."""
+    from repro.distributed.sharding import constrain
+    m = cfg.moe
+    G, Tg, d = xg.shape
+    E, k = m.n_experts, m.top_k
+    cd = xg.dtype
+
+    pos = jax.vmap(lambda i: _position_in_expert(i, E))(idx)   # (G, Tg, k)
+    valid = pos < C
+    dest = jnp.where(valid, idx * C + pos, E * C)              # OOB sentinel
+
+    def scatter_one(x1, d1):
+        x_rep = jnp.repeat(x1[:, None, :], k, axis=1).reshape(Tg * k, d)
+        return jnp.zeros((E * C, d), cd).at[d1.reshape(Tg * k)].add(
+            x_rep, mode="drop")
+
+    # vmapped (= batched) scatter: GSPMD partitions the G batch dim over
+    # DP cleanly; flattened-offset indexing hides that locality from it
+    xe = jax.vmap(scatter_one)(xg, dest).reshape(G, E, C, d)
+    xe = constrain(xe, ("dp", None, None, None))
+
+    wg = _w(p, "wg", cd)
+    engine._record(name=f"{name}.experts",
+                   regime=dataflow.classify_regime(C, wg.shape[-1], d),
+                   m=C, n=wg.shape[-1], k=d, case=0, backend="xla")
+    act = "silu" if cfg.mlp == "swiglu" else "gelu"
+    g_ = jnp.einsum("gecd,edf->gecf", xe, wg)
+    u_ = jnp.einsum("gecd,edf->gecf", xe, _w(p, "wu", cd))
+    from repro.kernels.ref import apply_act
+    h = apply_act(g_.astype(jnp.float32), act).astype(cd) * u_
+    h = constrain(h, ("dp", None, None, "tp"))
+    ye = jnp.einsum("gecf,efd->gecd", h, _w(p, "wd", cd))
+    ye = constrain(ye, ("dp", None, None, None))
+
+    back = jax.vmap(lambda y1, d1: y1.at[d1.reshape(Tg * k)].get(
+        mode="fill", fill_value=0))(ye.reshape(G, E * C, d), dest)
+    back = back.reshape(G, Tg, k, d)
+    return jnp.einsum("gtk,gtkd->gtd", vals.astype(cd), back)
+
+
+def _n_groups(T: int, B: int) -> int:
+    """Dispatch groups = data shards, so tokens never cross the DP axis for
+    routing (the Switch per-core capacity scheme).  Without grouping the
+    (tokens -> expert-buffer) scatter-add crosses DP shards and GSPMD emits
+    multi-GB all-reduces of the expert inputs (observed on mixtral
+    train_4k).  Group boundaries follow the batch dim, which is what the
+    DP sharding slices."""
+    from repro.distributed import sharding as SH
+    mesh = SH.active_mesh()
+    if mesh is None:
+        return 1
+    g = SH.dp_size(mesh)
+    return g if (g > 1 and B % g == 0 and T % g == 0) else 1
+
+
+def moe_block(cfg, p: dict, x: jax.Array,
+              name: str = "moe") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_load_balance_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    G = _n_groups(T, B)
+    Tg = T // G
+    C = _capacity(Tg, cfg)
+    xg = x.reshape(G, Tg, d)
+    from repro.distributed.sharding import constrain
+    xg = constrain(xg, ("dp", None, None))
+
+    vals, idx, aux = _route(cfg, p, xg.reshape(T, d), name)
+    vals = vals.reshape(G, Tg, m.top_k)
+    idx = idx.reshape(G, Tg, m.top_k)
+
+    if Tg <= _EINSUM_DISPATCH_MAX_T and Tg * m.n_experts * C <= 2**24:
+        # small per-group token counts (decode steps): one-hot dispatch,
+        # vmapped over groups — the grouped scatter wastes collectives here
+        if G == 1:
+            out = _moe_einsum(cfg, p, xg[0], vals[0], idx[0], C, name)
+        else:
+            out = jax.vmap(
+                lambda x1, v1, i1: _moe_einsum(cfg, p, x1, v1, i1, C,
+                                               name))(xg, vals, idx)
+    else:
+        out = _moe_scatter_grouped(cfg, p, xg, vals, idx, C, name)
+    out = out.reshape(B, S, d)
+    if m.shared_expert:
+        out = out + mlp(cfg, p["shared"], x, name=f"{name}.shared")
+    return out, aux

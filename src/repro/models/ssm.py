@@ -1,0 +1,189 @@
+"""Mamba2 blocks — SSD (state-space duality) chunked algorithm.
+
+Training/prefill uses the chunked SSD decomposition of arXiv:2405.21060:
+within a chunk the output is a masked quadratic (attention-like) term; the
+inter-chunk recurrence runs over chunk *summaries* via
+``lax.associative_scan`` (log-depth, TPU-friendly — no sequential scan on
+the hot path).  Decode is the O(1) recurrent step on the cached state.
+Validated against the naive recurrence oracle ``repro.kernels.ref.ssd``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import engine
+from repro.models.layers import dense_init, rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def init_mamba(cfg, key, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    ns = s.d_state
+    cw = s.conv_width
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    # in_proj -> [z(di), x(di), B(ns), C(ns), dt(nh)]
+    return {
+        "in_proj": dense_init(k1, d, 2 * di + 2 * ns + nh, dtype),
+        "conv_w": (jax.random.normal(k2, (cw, di + 2 * ns), jnp.float32)
+                   * (cw ** -0.5)).astype(jnp.float32),
+        "conv_b": jnp.zeros((di + 2 * ns,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(                      # softplus^-1
+            jax.random.uniform(k3, (nh,), jnp.float32, 1e-3, 1e-1))),
+        "a_log": jnp.log(jax.random.uniform(k4, (nh,), jnp.float32, 1.0, 16.0)),
+        "norm_w": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(k5, di, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD
+# ---------------------------------------------------------------------------
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, *, chunk: int,
+                init_state: Optional[jax.Array] = None,
+                return_state: bool = False):
+    """Same contract as :func:`repro.kernels.ref.ssd`, chunk-parallel.
+
+    x: (B,S,H,D); dt: (B,S,H); a: (H,); b,c: (B,S,N);
+    state: (B,H,D,N).
+    """
+    Bt, S, H, D = x.shape
+    N = b.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    Sp = S + pad
+    nc = Sp // chunk
+
+    f32 = jnp.float32
+    xc = x.astype(f32).reshape(Bt, nc, chunk, H, D)
+    dtc = dt.astype(f32).reshape(Bt, nc, chunk, H)
+    bc = b.astype(f32).reshape(Bt, nc, chunk, N)
+    cc = c.astype(f32).reshape(Bt, nc, chunk, N)
+
+    dA = dtc * a.astype(f32)[None, None, None, :]            # (B,nc,c,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                             # inclusive
+
+    # ---- intra-chunk (masked quadratic) --------------------------------
+    # decay[t,s] = exp(cum[t]-cum[s]) for s <= t
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,t,s,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(mask[None, None, :, :, None], jnp.exp(rel), 0.0)
+    cb = jnp.einsum("bztn,bzsn->bzts", cc, bc)               # (B,nc,t,s)
+    dx = dtc[..., None] * xc                                  # (B,nc,c,H,D)
+    y = jnp.einsum("bzts,bztsh,bzshd->bzthd", cb, decay, dx)
+
+    # ---- chunk summaries + inter-chunk recurrence ----------------------
+    # state contribution of chunk z: sum_s exp(cum_end - cum_s) dx_s b_s^T
+    edge = jnp.exp(cum[:, :, -1:, :] - cum)                   # (B,nc,c,H)
+    states = jnp.einsum("bzsh,bzshd,bzsn->bzhdn", edge, dx, bc)
+    total = jnp.exp(cum[:, :, -1, :])                         # (B,nc,H)
+
+    h0 = (jnp.zeros((Bt, H, D, N), f32) if init_state is None
+          else init_state.astype(f32))
+    # prepend the initial state as a pseudo-chunk so the scan carries it
+    total_ = jnp.concatenate([jnp.ones((Bt, 1, H), f32), total], 1)
+    states_ = jnp.concatenate([h0[:, None], states], 1)
+
+    def combine(lhs, rhs):
+        d1, s1 = lhs
+        d2, s2 = rhs
+        return d1 * d2, s1 * d2[..., None, None] + s2
+
+    dec_acc, h_acc = jax.lax.associative_scan(
+        combine, (total_, states_), axis=1)
+    h_prev = h_acc[:, :-1]                                    # state entering z
+    h_last = h_acc[:, -1]
+
+    # ---- inter-chunk contribution --------------------------------------
+    inflow = jnp.exp(cum)                                     # decay since entry
+    y = y + jnp.einsum("bztn,bzth,bzhdn->bzthd", cc, inflow, h_prev)
+
+    y = y.reshape(Bt, Sp, H, D)[:, :S].astype(x.dtype)
+    if return_state:
+        return y, h_last
+    return y
+
+
+# ---------------------------------------------------------------------------
+# full block
+# ---------------------------------------------------------------------------
+def _split(cfg, zxbcdt):
+    s = cfg.ssm
+    d = cfg.d_model
+    di, ns, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns:]
+    return z, xbc, dt, di, ns, nh
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 prev: Optional[jax.Array] = None):
+    """Depthwise causal conv; ``prev`` is the (B, cw-1, ch) decode tail."""
+    cw = w.shape[0]
+    if prev is not None:
+        xin = jnp.concatenate([prev, xbc], axis=1)
+    else:
+        xin = jnp.pad(xbc, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(xin[:, i:i + xbc.shape[1], :].astype(jnp.float32) * w[i]
+              for i in range(cw)) + bias
+    tail = xin[:, -(cw - 1):, :]
+    return jax.nn.silu(out).astype(xbc.dtype), tail
+
+
+def mamba_forward(cfg, p: dict, x: jax.Array, *,
+                  cache: Optional[dict] = None,
+                  return_cache: bool = False):
+    """x: (B,S,d).  cache={'conv': (B,cw-1,ch), 'h': (B,H,D,N)} for decode."""
+    s = cfg.ssm
+    zxbcdt = engine.matmul(x, p["in_proj"], name="ssm.in_proj")
+    z, xbc, dt, di, ns, nh = _split(cfg, zxbcdt)
+    hd = s.head_dim
+
+    prev = cache["conv"] if cache is not None else None
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev)
+    xin, bm, cm = xbc[..., :di], xbc[..., di:di + ns], xbc[..., di + ns:]
+
+    B_, S_ = x.shape[:2]
+    xh = xin.reshape(B_, S_, nh, hd)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])
+
+    h0 = cache["h"] if cache is not None else None
+    if cache is not None and S_ == 1:
+        # O(1) recurrent decode step (the oracle recurrence, one step)
+        from repro.kernels import ref
+        y, h = ref.ssd(xh, dt, a, bm, cm, init_state=h0, return_state=True)
+    else:
+        y, h = ssd_chunked(xh, dt, a, bm, cm, chunk=s.chunk,
+                           init_state=h0, return_state=True)
+
+    y = y.reshape(B_, S_, di)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                p["norm_w"])
+    out = engine.matmul(y, p["out_proj"], name="ssm.out_proj")
+    if return_cache or cache is not None:
+        return out, {"conv": conv_tail, "h": h}
+    return out, None
+
+
+def init_mamba_cache(cfg, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di, ns, nh = s.d_inner(d), s.d_state, s.n_heads(d)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, di + 2 * ns), dtype),
+        "h": jnp.zeros((batch, nh, s.head_dim, ns), jnp.float32),
+    }

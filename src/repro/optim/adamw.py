@@ -1,0 +1,75 @@
+"""AdamW with ZeRO-friendly moment dtypes, cosine schedule, global-norm clip.
+
+Pure-JAX (no optax in this environment).  The optimizer state pytree is
+sharded like the parameters; for very large configs the moments are kept in
+bf16 (``TrainConfig.moment_dtype``) which halves optimizer bytes — the
+difference between llama3-405b fitting in a 256-chip pod or not (see
+EXPERIMENTS.md §Dry-run)."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init(params, tc: TrainConfig) -> AdamWState:
+    mdt = jnp.dtype(tc.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def lr_schedule(tc: TrainConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(1, tc.warmup_steps))
+    prog = jnp.clip((step - tc.warmup_steps)
+                    / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.lr * warm * (0.1 + 0.9 * cos)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32)
+                                   * scale).astype(g.dtype), grads), gn
+
+
+def apply(params, grads, state: AdamWState,
+          tc: TrainConfig) -> Tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(tc, state.step)
+    b1, b2, eps = tc.beta1, tc.beta2, tc.eps
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        mhat = mf / bc1
+        vhat = vf / bc2
+        pf = p.astype(jnp.float32)
+        pf = pf - lr * (mhat / (jnp.sqrt(vhat) + eps) + tc.weight_decay * pf)
+        return pf.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_p = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    return new_p, AdamWState(step, new_m, new_v), \
+        {"lr": lr, "grad_norm": gnorm}

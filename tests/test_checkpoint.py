@@ -1,0 +1,121 @@
+"""Checkpoint: atomic commit, async, resume, structure checks, elastic."""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpoint import Checkpointer
+from repro.distributed import elastic
+from repro.distributed.fault_tolerance import (HeartbeatTracker, StepDeadline,
+                                               StepMonitor)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 8)),
+            "b": {"c": jnp.arange(5, dtype=jnp.int32)}}
+
+
+def test_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(3, t, extra={"loss": 1.5})
+    out, step, extra = ck.restore(t)
+    assert step == 3 and extra["loss"] == 1.5
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_save_and_gc(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, _tree(s), async_save=True)
+    ck.wait()
+    assert ck.steps() == [3, 4]            # keep=2 garbage collection
+    out, step, _ = ck.restore(_tree())
+    assert step == 4
+    np.testing.assert_array_equal(out["a"], _tree(4)["a"])
+
+
+def test_atomic_no_partial_visible(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    # a stale tmp dir from a crashed writer must be invisible
+    os.makedirs(os.path.join(str(tmp_path), "step_00000009.tmp"))
+    assert ck.latest_step() == 1
+
+
+def test_structure_mismatch_detected(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    with pytest.raises(AssertionError):
+        ck.restore({"only": jnp.zeros(3)})
+
+
+def test_restore_missing_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        Checkpointer(str(tmp_path)).restore(_tree())
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance / elastic
+# ---------------------------------------------------------------------------
+def test_straggler_detection():
+    mon = StepMonitor(factor=3.0, warmup=3)
+    for s in range(5):
+        assert mon.observe(s, 1.0) == "ok"
+    assert mon.observe(5, 10.0) == "straggler"
+    assert mon.observe(6, 1.1) == "ok"      # median not poisoned
+
+
+def test_heartbeat_failure_detection():
+    hb = HeartbeatTracker(["n0", "n1", "n2"], timeout=10.0)
+    hb.beat("n0", now=100.0)
+    hb.beat("n1", now=100.0)
+    hb._beats["n2"].last_seen = 80.0
+    assert hb.failed(now=100.0) == ["n2"]
+    assert hb.survivors(now=100.0) == ["n0", "n1"]
+
+
+def test_step_deadline():
+    d = StepDeadline(5.0)
+    assert not d.expired()
+    d.begin()
+    assert not d.expired(now=d._start + 1)
+    assert d.expired(now=d._start + 6)
+
+
+def test_elastic_replan_keeps_model_parallel():
+    p = elastic.replan(512, model_parallel=16, global_batch=256)
+    assert p.model == 16 and p.used_chips == 512 and p.wasted_chips == 0
+    # lose one pod's worth
+    p2 = elastic.replan(384, model_parallel=16, global_batch=256)
+    assert p2.model == 16
+    assert p2.used_chips <= 384
+    assert p2.data * p2.pods <= 256          # batch divisibility
+    with pytest.raises(AssertionError):
+        elastic.replan(8, model_parallel=16)
+
+
+def test_elastic_restart_roundtrip(tmp_path):
+    """Checkpoint written under one mesh restores under a degraded one
+    (mesh-agnostic leaves)."""
+    ck = Checkpointer(str(tmp_path))
+    t = _tree()
+    ck.save(10, t)
+    plan = elastic.replan(128, model_parallel=16, global_batch=256)
+    assert plan.shape[-1] == 16
+    out, step, _ = ck.restore(t)             # same bytes, any mesh
+    assert step == 10
+    np.testing.assert_array_equal(out["a"], t["a"])
+
+
+def test_degrade_sequence_monotone():
+    plans = elastic.degrade_sequence(512, [128, 128, 64],
+                                     model_parallel=16, global_batch=256)
+    sizes = [p.used_chips for p in plans]
+    assert sizes == sorted(sizes, reverse=True)

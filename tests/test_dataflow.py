@@ -1,0 +1,68 @@
+"""Property tests for the Case 1-4 dataflow planner (hypothesis)."""
+from __future__ import annotations
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.accelerator import TPU_V5E
+from repro.core.dataflow import (classify_regime, compulsory_bytes,
+                                 plan_matmul)
+
+dims = st.integers(1, 1 << 15)
+
+
+@settings(max_examples=60, deadline=None)
+@given(m=dims, n=dims, k=dims)
+def test_traffic_never_below_compulsory(m, n, k):
+    p = plan_matmul(m, n, k)
+    # padded compulsory (the planner accounts padded tiles)
+    assert p.hbm_bytes >= compulsory_bytes(m, n, k) * 0.5
+    assert p.flops == 2 * m * n * k
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=dims, n=dims, k=dims)
+def test_vmem_within_budget(m, n, k):
+    p = plan_matmul(m, n, k)
+    assert p.vmem_bytes <= TPU_V5E.vmem_budget
+    assert p.case in (1, 2, 3, 4)
+    assert p.bm >= 1 and p.bn >= 1 and p.bk >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(m=dims, n=dims, k=dims)
+def test_bigger_budget_never_hurts(m, n, k):
+    """Monotonicity: more on-chip memory never increases planned traffic
+    (the paper's premise that buffer capacity buys DRAM-access reduction)."""
+    small = plan_matmul(m, n, k, vmem_budget=8 * 2**20)
+    big = plan_matmul(m, n, k, vmem_budget=96 * 2**20)
+    assert big.hbm_bytes <= small.hbm_bytes
+
+
+@settings(max_examples=30, deadline=None)
+@given(b=st.integers(1, 64), n=dims, k=dims)
+def test_decode_shapes_route_to_sa_fc(b, n, k):
+    """Weight-reuse ~ b << ridge: decode GEMVs must take the streaming
+    array (the paper's FC observation)."""
+    if n < 512 or k < 512:
+        return
+    assert classify_regime(b, n, k) == "sa_fc"
+
+
+def test_train_shapes_route_to_sa_conv():
+    assert classify_regime(8192, 8192, 8192) == "sa_conv"
+    assert classify_regime(1_048_576, 14336, 4096) == "sa_conv"
+
+
+def test_case1_when_everything_fits():
+    p = plan_matmul(128, 256, 256)
+    assert p.case == 1
+    # every operand moved exactly once
+    assert p.hbm_bytes == compulsory_bytes(128, 256, 256)
+
+
+def test_case_degrades_with_size():
+    cases = [plan_matmul(128, 256, 256).case,
+             plan_matmul(4096, 8192, 8192).case,
+             plan_matmul(65536, 65536, 65536).case]
+    assert cases == sorted(cases), cases

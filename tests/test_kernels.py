@@ -1,0 +1,137 @@
+"""Per-kernel allclose sweeps vs. the pure-jnp oracles (interpret mode)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.attention import flash_attention
+from repro.kernels.conv2d import conv2d_mpna
+from repro.kernels.pool_act import maxpool_act
+from repro.kernels.sa_conv import sa_conv_matmul
+from repro.kernels.sa_fc import sa_fc_matmul
+
+RTOL = dict(rtol=3e-4, atol=3e-4)
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# SA-CONV / SA-FC matmul dataflows
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,n,k", [(64, 256, 384), (100, 300, 200),
+                                   (1, 128, 256), (257, 513, 129),
+                                   (16, 128, 128)])
+@pytest.mark.parametrize("act", ["none", "relu", "silu"])
+def test_sa_conv_sweep(m, n, k, dtype, act):
+    x, w = _rand(0, (m, k), dtype), _rand(1, (k, n), dtype)
+    b = _rand(2, (n,), dtype)
+    got = sa_conv_matmul(x, w, b, act=act)
+    want = ref.matmul_bias_act(x, w, b, act=act)
+    tol = RTOL if dtype == jnp.float32 else dict(rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(got.astype(jnp.float32),
+                               want.astype(jnp.float32), **tol)
+
+
+@pytest.mark.parametrize("b,k,n", [(1, 512, 1024), (8, 300, 700),
+                                   (16, 4096, 512), (3, 128, 128)])
+def test_sa_fc_sweep(b, k, n):
+    x, w = _rand(0, (b, k), jnp.float32), _rand(1, (k, n), jnp.float32)
+    got = sa_fc_matmul(x, w, act="none")
+    np.testing.assert_allclose(got, ref.gemv(x, w), **RTOL)
+
+
+@settings(max_examples=12, deadline=None)
+@given(m=st.integers(1, 130), n=st.integers(1, 300), k=st.integers(1, 300))
+def test_sa_conv_property_shapes(m, n, k):
+    """Property: any (m,n,k) agrees with the oracle (padding correctness)."""
+    x, w = _rand(3, (m, k), jnp.float32), _rand(4, (k, n), jnp.float32)
+    np.testing.assert_allclose(sa_conv_matmul(x, w), ref.matmul(x, w),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_sa_conv_sa_fc_same_semantics():
+    """The two dataflows implement the same operator (paper Sec. IV-B)."""
+    x, w = _rand(0, (16, 256), jnp.float32), _rand(1, (256, 512), jnp.float32)
+    np.testing.assert_allclose(sa_conv_matmul(x, w), sa_fc_matmul(x, w),
+                               **RTOL)
+
+
+# ---------------------------------------------------------------------------
+# conv2d + fused maxpool/activation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,h,w,i,p,q,j,s", [
+    (2, 16, 16, 3, 3, 3, 32, 1), (1, 27, 27, 48, 5, 5, 64, 1),
+    (2, 15, 15, 8, 3, 3, 16, 2)])
+def test_conv2d_sweep(n, h, w, i, p, q, j, s):
+    x = _rand(0, (n, h, w, i), jnp.float32)
+    f = _rand(1, (p, q, i, j), jnp.float32) * 0.1
+    b = _rand(2, (j,), jnp.float32)
+    got = conv2d_mpna(x, f, b, stride=s, act="relu")
+    want = ref.apply_act(ref.conv2d(x, f, stride=s) + b, "relu")
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("win,stride", [(2, 2), (3, 2)])
+@pytest.mark.parametrize("act", ["relu", "leaky_relu"])
+def test_pool_act_and_reorder_identity(win, stride, act):
+    x = _rand(0, (2, 13, 13, 96), jnp.float32)
+    got = maxpool_act(x, window=win, stride=stride, act=act)
+    want = ref.maxpool_act(x, window=win, stride=stride, act=act)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+    # paper Sec. IV-D: act(maxpool(x)) == maxpool(act(x)) for monotone act
+    alt = ref.maxpool2d(ref.apply_act(x, act), window=win, stride=stride)
+    np.testing.assert_allclose(got, alt, rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(6, 24), c=st.integers(1, 40),
+       win=st.sampled_from([2, 3]))
+def test_pool_act_property(h, c, win):
+    x = _rand(5, (1, h, h, c), jnp.float32)
+    if (h - win) < 0:
+        return
+    got = maxpool_act(x, window=win, stride=win, act="relu")
+    want = ref.maxpool_act(x, window=win, stride=win, act="relu")
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("case", [
+    dict(b=2, sq=256, skv=256, hq=4, hkv=2, d=64, window=0, softcap=0.0),
+    dict(b=1, sq=256, skv=256, hq=8, hkv=8, d=32, window=64, softcap=0.0),
+    dict(b=2, sq=128, skv=128, hq=4, hkv=1, d=64, window=0, softcap=50.0),
+    dict(b=1, sq=1, skv=300, hq=4, hkv=2, d=64, window=0, softcap=0.0),
+    dict(b=1, sq=1, skv=300, hq=4, hkv=2, d=64, window=128, softcap=0.0),
+    dict(b=2, sq=200, skv=200, hq=2, hkv=2, d=48, window=0, softcap=0.0),
+])
+def test_flash_attention_sweep(case):
+    c = dict(case)
+    q = _rand(0, (c["b"], c["sq"], c["hq"], c["d"]), jnp.float32)
+    k = _rand(1, (c["b"], c["skv"], c["hkv"], c["d"]), jnp.float32)
+    v = _rand(2, (c["b"], c["skv"], c["hkv"], c["d"]), jnp.float32)
+    got = flash_attention(q, k, v, window=c["window"], softcap=c["softcap"],
+                          bq=64, bkv=128)
+    want = ref.attention(q, k, v, window=c["window"], softcap=c["softcap"])
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(sq=st.integers(1, 160), hkv=st.sampled_from([1, 2, 4]),
+       g=st.sampled_from([1, 2]), window=st.sampled_from([0, 32]))
+def test_flash_attention_property(sq, hkv, g, window):
+    q = _rand(6, (1, sq, hkv * g, 32), jnp.float32)
+    k = _rand(7, (1, sq, hkv, 32), jnp.float32)
+    v = _rand(8, (1, sq, hkv, 32), jnp.float32)
+    got = flash_attention(q, k, v, window=window, bq=32, bkv=128)
+    want = ref.attention(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)

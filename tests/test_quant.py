@@ -1,0 +1,80 @@
+"""int8 weight quantization (the paper's 8-bit fixed point) tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import engine, quant
+from repro.models import transformer as T
+from repro.serve import kvcache as KC
+from repro.serve.serve_step import decode_step, prefill_step
+
+CFG = ModelConfig(name="q", family="dense", n_layers=2, d_model=128,
+                  n_heads=4, n_kv_heads=2, d_ff=256, vocab_size=512,
+                  head_dim=32, param_dtype="float32",
+                  compute_dtype="float32")
+
+
+def test_quantize_roundtrip_error_bounded():
+    w = jax.random.normal(jax.random.PRNGKey(0), (256, 512)) * 0.1
+    qt = quant.quantize(w)
+    back = quant.dequantize(qt, jnp.float32)
+    err = jnp.max(jnp.abs(back - w))
+    # per-channel symmetric int8: error <= scale/2 per element
+    assert float(err) <= float(jnp.max(qt.scale)) * 0.5 + 1e-7
+    assert qt.q.dtype == jnp.int8
+
+
+def test_engine_matmul_accepts_qtensor():
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 256)) * 0.5
+    w = jax.random.normal(jax.random.PRNGKey(2), (256, 128)) * 0.1
+    qt = quant.quantize(w)
+    y = engine.matmul(x, w)
+    yq = engine.matmul(x, qt)
+    rel = float(jnp.linalg.norm(yq - y) / jnp.linalg.norm(y))
+    assert rel < 0.01, rel
+
+
+def test_quantized_decode_matches_full_precision():
+    """W8 serving: logits track full precision; top-1 token agrees on a
+    strong margin-free check of argmax agreement rate."""
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    qparams = quant.quantize_params(params)
+    S = 16
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, S), 0, 512)
+
+    _, cache = prefill_step(CFG, params, {"tokens": tokens[:, :S - 1]},
+                            S + 4, cache_dtype=jnp.float32)
+    logits, _ = decode_step(CFG, params, cache, tokens[:, S - 1:],
+                            jnp.int32(S - 1))
+    _, qcache = prefill_step(CFG, qparams, {"tokens": tokens[:, :S - 1]},
+                             S + 4, cache_dtype=jnp.float32)
+    qlogits, _ = decode_step(CFG, qparams, qcache, tokens[:, S - 1:],
+                             jnp.int32(S - 1))
+    rel = float(jnp.linalg.norm(qlogits - logits)
+                / jnp.linalg.norm(logits))
+    assert rel < 0.05, rel
+    agree = float(jnp.mean(jnp.argmax(qlogits, -1) == jnp.argmax(logits, -1)))
+    assert agree >= 0.75
+
+
+def test_param_bytes_shrink():
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    qparams = quant.quantize_params(params)
+    full = quant.quantized_bytes(params)
+    q = quant.quantized_bytes(qparams)
+    # matmul weights dominate this config; expect a large cut (f32 -> int8)
+    assert q < 0.45 * full, (q, full)
+
+
+def test_quantized_tree_is_checkpointable(tmp_path):
+    from repro.checkpoint.checkpoint import Checkpointer
+    params = quant.quantize_params(T.init_params(CFG, jax.random.PRNGKey(0)))
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, params)
+    out, step, _ = ck.restore(params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,122 @@
+"""Training-substrate tests: convergence, microbatch equivalence, gradient
+compression, schedules."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import transformer as T
+from repro.optim import adamw, grad_compress
+from repro.train import train_step as TS
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                  n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=128,
+                  head_dim=16, param_dtype="float32",
+                  compute_dtype="float32")
+
+
+def _data(tc):
+    return SyntheticLM(DataConfig(CFG.vocab_size, tc.seq_len,
+                                  tc.global_batch, seed=1), CFG)
+
+
+def test_loss_decreases():
+    tc = TrainConfig(global_batch=8, seq_len=32, total_steps=25, lr=3e-3,
+                     warmup_steps=5)
+    step = jax.jit(TS.make_train_step(CFG, tc))
+    state = TS.init_train_state(CFG, tc, jax.random.PRNGKey(0))
+    data = _data(tc)
+    params, opt, cs = state
+    losses = []
+    for i in range(tc.total_steps):
+        params, opt, cs, m = step(params, opt, cs, data.batch_at(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.8, losses[::6]
+
+
+def test_microbatch_grads_match_full_batch():
+    """Gradient accumulation is exact (not an approximation)."""
+    tc_full = TrainConfig(global_batch=8, seq_len=16, microbatch=0)
+    tc_mb = TrainConfig(global_batch=8, seq_len=16, microbatch=2)
+    params = T.init_params(CFG, jax.random.PRNGKey(0))
+    batch = _data(tc_full).batch_at(0)
+
+    loss_full = TS.make_loss(CFG, tc_full)
+    (l1, _), g1 = jax.value_and_grad(loss_full, has_aux=True)(params, batch)
+
+    # reuse the internal accumulation path
+    step = TS.make_train_step(CFG, tc_mb)
+    # grads_of is internal; compare through one optimizer step instead
+    opt = adamw.init(params, tc_mb)
+    cs = grad_compress.CompressState(error=jax.tree.map(
+        lambda p: jnp.zeros((), jnp.float32), params))
+    p2, _, _, m2 = step(params, opt, cs, batch)
+
+    opt_f = adamw.init(params, tc_full)
+    step_f = TS.make_train_step(CFG, tc_full)
+    p1, _, _, m1 = step_f(params, opt_f, cs, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_grad_clip_bounds_update():
+    g = {"w": jnp.ones((4, 4)) * 100.0}
+    clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+    assert float(gn) == pytest.approx(400.0)
+    total = jnp.sqrt(sum(jnp.sum(x**2) for x in jax.tree.leaves(clipped)))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_lr_schedule_shape():
+    tc = TrainConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.lr_schedule(tc, jnp.int32(s))) for s in range(100)]
+    assert lrs[0] < lrs[9] <= 1e-3 + 1e-9          # warmup rises
+    assert lrs[99] < lrs[50] < lrs[15]             # cosine decays
+    assert lrs[99] >= 0.1 * 1e-3 - 1e-9            # floor
+
+
+@pytest.mark.parametrize("scheme", ["int8", "topk"])
+def test_grad_compress_error_feedback(scheme):
+    """Error feedback: compressed-sum converges to the true sum (the
+    residual never grows unboundedly)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 64))}
+    state = grad_compress.init(g)
+    acc_true = jnp.zeros((64, 64))
+    acc_comp = jnp.zeros((64, 64))
+    for i in range(20):
+        gi = {"w": jax.random.normal(jax.random.PRNGKey(i), (64, 64))}
+        out, state = grad_compress.compress_grads(gi, state, scheme)
+        acc_true += gi["w"]
+        acc_comp += out["w"]
+    # residual bounded by one step's worth of compression error
+    resid = float(jnp.linalg.norm(acc_true - acc_comp))
+    assert resid <= float(jnp.linalg.norm(state.error["w"])) + 1e-3
+
+
+def test_wire_bytes_savings():
+    params = {"w": jnp.zeros((1000, 1000))}
+    full = grad_compress.wire_bytes(params, "none")
+    assert grad_compress.wire_bytes(params, "int8") < 0.3 * full
+    assert grad_compress.wire_bytes(params, "topk") < 0.05 * full
+
+
+def test_data_pipeline_deterministic_and_resumable():
+    dc = DataConfig(vocab_size=97, seq_len=16, global_batch=4, seed=7)
+    a, b = SyntheticLM(dc), SyntheticLM(dc)
+    np.testing.assert_array_equal(a.batch_at(5)["tokens"],
+                                  b.batch_at(5)["tokens"])
+    assert not np.array_equal(a.batch_at(5)["tokens"],
+                              a.batch_at(6)["tokens"])
+    # shards partition the stream deterministically
+    s0 = SyntheticLM(dataclasses.replace(dc, n_shards=2, shard=0))
+    s1 = SyntheticLM(dataclasses.replace(dc, n_shards=2, shard=1))
+    assert not np.array_equal(s0.batch_at(0)["tokens"],
+                              s1.batch_at(0)["tokens"])
