@@ -74,20 +74,39 @@ def kernels_interpret() -> List[Row]:
 
 
 def engine_dispatch() -> List[Row]:
-    """The heterogeneous-dispatch decision itself (per-op planning cost)."""
-    from repro.core import engine
+    """The heterogeneous-dispatch decision itself (per-op planning cost),
+    and the same op resolved by LayerSchedule lookup instead."""
+    from repro.configs.base import ModelConfig
+    from repro.core.engine import Engine
+    from repro.core.schedule import LayerSchedule
+    eng = Engine()
     x = jnp.ones((8, 4096), jnp.bfloat16)
     w = jnp.ones((4096, 4096), jnp.bfloat16)
-    with engine.dispatch_trace() as tr:
+    with eng.tracing() as tr:
         t0 = time.perf_counter()
-        engine.matmul(x, w, name="bench")
+        eng.matmul(x, w, name="bench")
         us = (time.perf_counter() - t0) * 1e6
     regime = tr[0]["regime"]
     xl = jnp.ones((8192, 4096), jnp.bfloat16)
-    with engine.dispatch_trace() as tr2:
-        engine.matmul(xl, w, name="bench")
+    with eng.tracing() as tr2:
+        t0 = time.perf_counter()
+        eng.matmul(xl, w, name="bench")
+        us_train = (time.perf_counter() - t0) * 1e6
+    cfg = ModelConfig(name="bench", family="dense", n_layers=2, d_model=512,
+                      n_heads=8, n_kv_heads=4, d_ff=2048, vocab_size=8192,
+                      head_dim=64)
+    t0 = time.perf_counter()
+    LayerSchedule.compile(cfg, "decode", batch=8, max_seq=128)
+    compile_us = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    sched = LayerSchedule.compile(cfg, "decode", batch=8, max_seq=128)
+    memo_us = (time.perf_counter() - t0) * 1e6
     return [("engine/dispatch_decode", us, f"routed to {regime}"),
-            ("engine/dispatch_train", us, f"routed to {tr2[0]['regime']}")]
+            ("engine/dispatch_train", us_train,
+             f"routed to {tr2[0]['regime']}"),
+            ("engine/schedule_compile", compile_us,
+             f"{len(sched)} ops planned offline"),
+            ("engine/schedule_memo_hit", memo_us, "cached object")]
 
 
 def dispatch_census() -> List[Row]:
@@ -98,11 +117,12 @@ def dispatch_census() -> List[Row]:
     import jax.numpy as jnp
     from repro.configs.base import SHAPES_BY_NAME
     from repro.configs.registry import all_lm_configs
-    from repro.core import engine
+    from repro.core.engine import Engine
     from repro.models import transformer as Tm
     from repro.serve import kvcache as KC
     from repro.serve.serve_step import decode_step
 
+    eng = Engine()
     rows = []
     for arch in ("llama3-405b", "mixtral-8x7b", "mamba2-130m"):
         cfg = all_lm_configs()[arch]
@@ -111,7 +131,7 @@ def dispatch_census() -> List[Row]:
         tr_shape = SHAPES_BY_NAME["train_4k"]
         toks = jax.ShapeDtypeStruct((tr_shape.global_batch,
                                      tr_shape.seq_len), jnp.int32)
-        with engine.dispatch_trace() as tr:
+        with eng.tracing() as tr, eng.activate():
             jax.eval_shape(lambda p, t, c=cfg: Tm.loss_fn(c, p,
                                                           {"tokens": t}),
                            params, toks)
@@ -123,7 +143,7 @@ def dispatch_census() -> List[Row]:
         cache = jax.eval_shape(
             lambda c=cfg: KC.init_cache(c, 128, 1024, dtype=jnp.bfloat16))
         dt = jax.ShapeDtypeStruct((128, 1), jnp.int32)
-        with engine.dispatch_trace() as tr2:
+        with eng.tracing() as tr2, eng.activate():
             jax.eval_shape(lambda p, ca, t, c=cfg: decode_step(c, p, ca, t,
                                                                jnp.int32(7)),
                            params, cache, dt)

@@ -71,7 +71,8 @@ class MatmulPlan:
 
 def classify_regime(m: int, n: int, k: int,
                     bytes_per_elem: int = 2,
-                    chip: TPUChip = TPU_V5E) -> str:
+                    chip: TPUChip = TPU_V5E, *,
+                    bytes_w: int | None = None) -> str:
     """Heterogeneous-array dispatch (the SA-CONV vs SA-FC decision).
 
     Compulsory arithmetic intensity of the op = FLOPs / minimal bytes moved.
@@ -79,9 +80,16 @@ def classify_regime(m: int, n: int, k: int,
     (SA-FC) regime; above -> weight-stationary compute regime (SA-CONV).
     This reproduces the paper's observation that per-sample weight reuse of
     FC layers is 1 (intensity ~= 2*M) so no stationary schedule can help.
+
+    ``bytes_w`` is the per-element width of the *weight* operand (1 for the
+    paper's 8-bit fixed point / int8 :class:`~repro.core.quant.QTensor`):
+    narrower weights shrink the dominant k*n byte term and can lift a
+    decode-sized op across the ridge.
     """
+    if bytes_w is None:
+        bytes_w = bytes_per_elem
     flops = 2 * m * n * k
-    min_bytes = (m * k + k * n + m * n) * bytes_per_elem
+    min_bytes = (m * k + m * n) * bytes_per_elem + k * n * bytes_w
     intensity = flops / min_bytes
     return "sa_conv" if intensity >= chip.ridge_flops_per_byte else "sa_fc"
 
@@ -89,33 +97,42 @@ def classify_regime(m: int, n: int, k: int,
 def plan_matmul(m: int, n: int, k: int, *,
                 bytes_in: int = 2,
                 bytes_out: int = 4,
+                bytes_w: int | None = None,
                 vmem_budget: int | None = None,
-                chip: TPUChip = TPU_V5E) -> MatmulPlan:
+                chip: TPUChip = TPU_V5E,
+                regime: str | None = None) -> MatmulPlan:
     """Pick block shapes + loop order for an (m,k)@(k,n) matmul.
 
     Traffic model for an output-stationary tiling with grid
     (gm, gn, gk) = (m/bm, n/bn, k/bk), K innermost:
 
         x bytes  = m*k*bytes_in  * gn     (x tile re-read per N block)
-        w bytes  = k*n*bytes_in  * gm     (w tile re-read per M block)
+        w bytes  = k*n*bytes_w   * gm     (w tile re-read per M block)
         o bytes  = m*n*bytes_out          (written once; fp32 psum stays in VMEM)
 
-    VMEM claim = 2*(bm*bk + bk*bn)*bytes_in (double-buffered inputs — the
-    paper's 'parallel weight movement' register) + bm*bn*4 (psum SPM).
+    VMEM claim = 2*(bm*bk*bytes_in + bk*bn*bytes_w) (double-buffered inputs
+    — the paper's 'parallel weight movement' register) + bm*bn*4 (psum SPM).
+
+    ``bytes_w`` defaults to ``bytes_in``; pass 1 for int8 weights so the
+    weight stream is costed at 1 byte/weight.  ``regime`` overrides the
+    intensity classification (a :class:`~repro.core.engine.DispatchPolicy`
+    forcing an array).
     """
     budget = vmem_budget if vmem_budget is not None else chip.vmem_budget
-    regime = classify_regime(m, n, k, bytes_in, chip)
+    bw = bytes_w if bytes_w is not None else bytes_in
+    if regime is None:
+        regime = classify_regime(m, n, k, bytes_in, chip, bytes_w=bw)
 
     mp = _round_up(m, SUBLANE)
     np_ = _round_up(n, LANE)
     kp = _round_up(k, LANE)
 
     def vmem(bm: int, bn: int, bk: int) -> int:
-        return 2 * (bm * bk + bk * bn) * bytes_in + bm * bn * 4
+        return 2 * (bm * bk * bytes_in + bk * bn * bw) + bm * bn * 4
 
     def traffic(bm: int, bn: int, bk: int) -> int:
         gm, gn = math.ceil(mp / bm), math.ceil(np_ / bn)
-        return mp * kp * bytes_in * gn + kp * np_ * bytes_in * gm \
+        return mp * kp * bytes_in * gn + kp * np_ * bw * gm \
             + mp * np_ * bytes_out
 
     # Candidate tilings for every scenario; the chosen plan is the
@@ -178,6 +195,8 @@ def plan_matmul(m: int, n: int, k: int, *,
 
 
 def compulsory_bytes(m: int, n: int, k: int,
-                     bytes_in: int = 2, bytes_out: int = 4) -> int:
+                     bytes_in: int = 2, bytes_out: int = 4,
+                     bytes_w: int | None = None) -> int:
     """Lower bound: every operand touched exactly once."""
-    return (m * k + k * n) * bytes_in + m * n * bytes_out
+    bw = bytes_w if bytes_w is not None else bytes_in
+    return m * k * bytes_in + k * n * bw + m * n * bytes_out

@@ -1,83 +1,197 @@
-"""Heterogeneous execution engine — MPNA's array dispatch as a runtime policy.
+"""Explicit heterogeneous execution engine — MPNA's array dispatch as an
+object API.
 
-The paper integrates two systolic arrays and routes each layer to the one
+The paper integrates two systolic arrays and assigns each layer to the one
 whose dataflow matches the layer's reuse pattern (CONV -> SA-CONV,
-FC -> SA-FC).  Here every dense projection in every model goes through
-:func:`matmul`, which classifies the operator by *compulsory arithmetic
-intensity vs. the chip ridge point* and routes it:
+FC -> SA-FC) in an *offline, per-layer schedule* (Sec. V).  This module is
+the runtime half of that design:
 
-* ``sa_conv`` regime — compute-bound (train/prefill matmuls): the
-  weight-stationary Pallas kernel with planner-chosen Case-1..4 tiling.
-* ``sa_fc`` regime — HBM-bound (decode GEMVs, tiny-m expert matmuls): the
-  weight-streaming kernel; every weight byte moves exactly once.
+* :class:`Engine` — owns the execution configuration (``chip``,
+  ``backend``, ``interpret``), a pluggable :class:`DispatchPolicy` (the
+  SA-CONV/SA-FC classifier + Case-1..4 planner), an optional compiled
+  :class:`repro.core.schedule.LayerSchedule`, and a structured
+  :class:`DispatchTrace`.  ``engine.matmul`` / ``engine.attention`` are
+  methods; every dense projection in every model runs through them.
+* :class:`DispatchPolicy` — how an op is classified (compulsory arithmetic
+  intensity vs. the chip ridge point) and planned.  Swap the chip model,
+  the VMEM budget, or force a regime without touching call sites — the
+  reconfigurability that CARLA (arXiv:2010.00627) and the Multi-Mode
+  Inference Engine (arXiv:1712.03994) treat as first-class.
+* :class:`DispatchTrace` / :class:`DispatchRecord` — "which array did this
+  layer run on" as structured data, exactly like the paper's per-layer
+  schedule table.  Records carry the weight dtype, the plan case, and
+  whether the decision came from a compiled schedule (``hit``) or was
+  re-planned on the fly (``miss``).
 
-Dispatch decisions are made at trace time (shapes are static) and recorded
-in a trace that tests and the roofline report read — so "which array did
-this layer run on" is observable, exactly like the paper's per-layer
-schedule.
+int8 weights (:class:`repro.core.quant.QTensor`) flow into the Pallas
+kernels **un-dequantized**: the kernel streams the int8 bytes from HBM and
+fuses the per-channel scale into its accumulator-flush epilogue, so the
+weight stream is 1 byte/weight and the policy classifies the regime with
+1 byte/weight.
+
+Model code that cannot thread an ``Engine`` through its call graph uses
+:func:`current` — an explicit, engine-object stack pushed/popped by
+:meth:`Engine.activate`.  The legacy module-level ``matmul`` /
+``attention`` functions and the ``execution()`` / ``dispatch_trace()``
+context managers remain as thin deprecation shims over that stack so
+existing call sites keep working during the migration.
 """
 from __future__ import annotations
 
 import contextlib
+import dataclasses
+import functools
 import threading
-from dataclasses import dataclass, field
-from typing import Any, List, Optional
+from dataclasses import dataclass
+from typing import Any, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dataflow
-from repro.core.accelerator import TPU_V5E
+from repro.core.accelerator import TPU_V5E, TPUChip
+from repro.core.dataflow import MatmulPlan
 from repro.kernels import ref
 from repro.kernels.sa_conv import sa_conv_matmul
 from repro.kernels.sa_fc import sa_fc_matmul
 
 
-@dataclass
-class _EngineState(threading.local):
-    backend: str = "xla"            # "xla" | "pallas"
-    interpret: bool = True          # pallas interpret mode (CPU validation)
-    trace: Optional[List[dict]] = None
+# ---------------------------------------------------------------------------
+# structured dispatch trace
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DispatchRecord:
+    """One dispatch decision.  Supports ``rec["regime"]`` for
+    backward-compatibility with the dict-based trace."""
+    name: str
+    regime: str                 # 'sa_conv' | 'sa_fc' | 'attention'
+    m: int
+    n: int
+    k: int
+    case: int
+    backend: str
+    dtype: str = ""             # activation dtype
+    weight_dtype: str = ""      # 'int8' for QTensor weights
+    schedule: str = ""          # 'hit' | 'miss' | '' (no schedule attached)
+    plan: Optional[MatmulPlan] = None
+
+    def __getitem__(self, key: str) -> Any:
+        return getattr(self, key)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        return getattr(self, key, default)
 
 
-_STATE = _EngineState()
+class DispatchTrace:
+    """Ordered record of every dispatch decision made under an engine.
 
+    Behaves like a list of :class:`DispatchRecord` (iteration, indexing,
+    ``len``) so code written against the old list-of-dicts trace keeps
+    working unchanged."""
 
-@contextlib.contextmanager
-def execution(backend: str = "xla", interpret: bool = True):
-    """Select the execution path for ops issued inside the context."""
-    prev = (_STATE.backend, _STATE.interpret)
-    _STATE.backend, _STATE.interpret = backend, interpret
-    try:
-        yield
-    finally:
-        _STATE.backend, _STATE.interpret = prev
+    def __init__(self) -> None:
+        self.records: List[DispatchRecord] = []
 
+    def append(self, rec: DispatchRecord) -> None:
+        self.records.append(rec)
 
-@contextlib.contextmanager
-def dispatch_trace():
-    """Collect (name, regime, m, n, k, plan-case) dispatch records."""
-    prev = _STATE.trace
-    _STATE.trace = []
-    try:
-        yield _STATE.trace
-    finally:
-        _STATE.trace = prev
+    def __iter__(self) -> Iterator[DispatchRecord]:
+        return iter(self.records)
 
+    def __len__(self) -> int:
+        return len(self.records)
 
-def _record(**kw: Any) -> None:
-    if _STATE.trace is not None:
-        _STATE.trace.append(kw)
+    def __getitem__(self, i):
+        return self.records[i]
+
+    def by_regime(self, regime: str) -> List[DispatchRecord]:
+        return [r for r in self.records if r.regime == regime]
+
+    def counts(self) -> dict:
+        out: dict = {}
+        for r in self.records:
+            out[r.regime] = out.get(r.regime, 0) + 1
+        return out
+
+    def summary(self) -> str:
+        lines = [f"{r.name:24s} {r.regime:9s} case={r.case} "
+                 f"({r.m}x{r.k})@({r.k}x{r.n}) w={r.weight_dtype or '-'} "
+                 f"{r.schedule or 'planned'}" for r in self.records]
+        return "\n".join(lines)
 
 
 # ---------------------------------------------------------------------------
-# pallas-path autodiff: custom VJP whose backward matmuls also go through the
-# engine (dx = g w^T is itself classified; in decode it stays sa_fc).
+# dispatch policy
 # ---------------------------------------------------------------------------
-def _pallas_matmul(x2d, w, bias, act, regime, interpret):
+@dataclass(frozen=True)
+class DispatchPolicy:
+    """Pluggable SA-CONV/SA-FC classification + Case-1..4 planning.
+
+    ``chip`` supplies the ridge point and default VMEM budget;
+    ``vmem_budget`` overrides the planner's on-chip allowance;
+    ``force_regime`` pins every op to one array (ablations / tests);
+    ``overrides`` pins ops by exact name, mirroring the per-layer
+    exceptions a hand-tuned offline schedule would carry."""
+    chip: TPUChip = TPU_V5E
+    vmem_budget: Optional[int] = None
+    force_regime: Optional[str] = None          # 'sa_conv' | 'sa_fc'
+    overrides: Tuple[Tuple[str, str], ...] = ()  # (op name -> regime)
+
+    def __post_init__(self) -> None:
+        regimes = (None, "sa_conv", "sa_fc")
+        if self.force_regime not in regimes:
+            raise ValueError(f"force_regime must be one of {regimes[1:]}, "
+                             f"got {self.force_regime!r}")
+        for name, reg in self.overrides:
+            if reg not in regimes[1:]:
+                raise ValueError(f"override {name!r} names unknown regime "
+                                 f"{reg!r}; must be one of {regimes[1:]}")
+
+    def regime_for(self, name: str, m: int, n: int, k: int, *,
+                   act_bytes: int, weight_bytes: Optional[int] = None) -> str:
+        for pat, reg in self.overrides:
+            if name == pat:
+                return reg
+        if self.force_regime is not None:
+            return self.force_regime
+        return dataflow.classify_regime(m, n, k, act_bytes, self.chip,
+                                        bytes_w=weight_bytes)
+
+    def plan(self, m: int, n: int, k: int, *, act_bytes: int,
+             weight_bytes: Optional[int] = None,
+             regime: Optional[str] = None) -> MatmulPlan:
+        return _cached_plan(self, m, n, k, act_bytes,
+                            weight_bytes if weight_bytes is not None
+                            else act_bytes, regime)
+
+
+@functools.lru_cache(maxsize=4096)
+def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
+                 act_bytes: int, weight_bytes: int,
+                 regime: Optional[str]) -> MatmulPlan:
+    return dataflow.plan_matmul(
+        m, n, k, bytes_in=act_bytes, bytes_w=weight_bytes,
+        vmem_budget=policy.vmem_budget, chip=policy.chip, regime=regime)
+
+
+# ---------------------------------------------------------------------------
+# pallas-path autodiff: custom VJP whose backward matmuls also go through
+# the same kernels (dx = g w^T is itself in-regime; in decode it stays
+# sa_fc).  Bias-less ops get a structurally bias-less VJP — no sentinel
+# zero-bias argument and no fabricated scalar tangent.
+# ---------------------------------------------------------------------------
+def _pallas_matmul(x2d, w, bias, act, regime, interpret, *,
+                   plan=None, w_scale=None, out_dtype=None):
     if regime == "sa_fc":
-        return sa_fc_matmul(x2d, w, bias, act=act, interpret=interpret)
-    return sa_conv_matmul(x2d, w, bias, act=act, interpret=interpret)
+        bn = bk = 512
+        if plan is not None:
+            bn, bk = min(plan.bn, 512), min(plan.bk, 512)
+        return sa_fc_matmul(x2d, w, bias, act=act, bn=bn, bk=bk,
+                            w_scale=w_scale, out_dtype=out_dtype,
+                            interpret=interpret)
+    return sa_conv_matmul(x2d, w, bias, act=act, plan=plan,
+                          w_scale=w_scale, out_dtype=out_dtype,
+                          interpret=interpret)
 
 
 def _act_grad(pre, act):
@@ -87,72 +201,351 @@ def _act_grad(pre, act):
         jnp.ones_like(pre))[0]
 
 
-def _make_pallas_vjp(act: str, regime: str, interpret: bool, has_bias: bool):
-    @jax.custom_vjp
-    def f(x2d, w, bias):
-        return _pallas_matmul(x2d, w, bias if has_bias else None, act,
-                              regime, interpret)
-
-    def fwd(x2d, w, bias):
-        return f(x2d, w, bias), (x2d, w, bias)
-
-    def bwd(res, g):
-        x2d, w, bias = res
-        # recompute pre-activation through the same kernels
-        pre = _pallas_matmul(x2d, w, bias if has_bias else None, "none",
-                             regime, interpret).astype(jnp.float32)
+@functools.lru_cache(maxsize=256)
+def _make_pallas_vjp(act: str, regime: str, interpret: bool,
+                     has_bias: bool, out_dtype,
+                     plan: Optional[MatmulPlan]):
+    def _bwd_core(x2d, w, bias, g):
+        pre = _pallas_matmul(x2d, w, bias, "none", regime, interpret,
+                             plan=plan).astype(jnp.float32)
         dpre = (g.astype(jnp.float32) * _act_grad(pre, act)).astype(x2d.dtype)
         dx = _pallas_matmul(dpre, w.T, None, "none", regime, interpret)
         dw = _pallas_matmul(x2d.T, dpre, None, "none", "sa_conv", interpret)
-        db = jnp.sum(dpre, axis=0).astype(bias.dtype) if has_bias else (
-            jnp.zeros((), x2d.dtype))
-        return dx, dw.astype(w.dtype), db
+        return dpre, dx, dw.astype(w.dtype)
+
+    if has_bias:
+        @jax.custom_vjp
+        def f(x2d, w, bias):
+            return _pallas_matmul(x2d, w, bias, act, regime, interpret,
+                                  plan=plan, out_dtype=out_dtype)
+
+        def fwd(x2d, w, bias):
+            return f(x2d, w, bias), (x2d, w, bias)
+
+        def bwd(res, g):
+            x2d, w, bias = res
+            dpre, dx, dw = _bwd_core(x2d, w, bias, g)
+            db = jnp.sum(dpre.astype(jnp.float32), axis=0).astype(bias.dtype)
+            return dx, dw, db
+    else:
+        @jax.custom_vjp
+        def f(x2d, w):
+            return _pallas_matmul(x2d, w, None, act, regime, interpret,
+                                  plan=plan, out_dtype=out_dtype)
+
+        def fwd(x2d, w):
+            return f(x2d, w), (x2d, w)
+
+        def bwd(res, g):
+            x2d, w = res
+            _, dx, dw = _bwd_core(x2d, w, None, g)
+            return dx, dw
 
     f.defvjp(fwd, bwd)
     return f
 
 
+def _quantized_pallas_matmul(x2d, wq, w_scale, bias, act, regime, interpret,
+                             plan, out_dtype):
+    """Quantized pallas matmul, differentiable in ``x`` (and ``bias``).
+
+    The int8 weights + scale are closed over as constants: no weight
+    tangent (frozen quantized weights), and the backward pass streams the
+    transposed int8 matrix through the same kernels — dx = (g*act') with
+    the per-column scale folded in, dotted against q^T, so backward HBM
+    weight traffic is also 1 byte/weight."""
+    has_bias = bias is not None
+
+    def pre_fn(xv, bv):
+        return _pallas_matmul(xv, wq, bv, "none", regime, interpret,
+                              plan=plan, w_scale=w_scale)
+
+    @jax.custom_vjp
+    def f(xv, bv):
+        return _pallas_matmul(xv, wq, bv if has_bias else None, act, regime,
+                              interpret, plan=plan, w_scale=w_scale,
+                              out_dtype=out_dtype)
+
+    def fwd(xv, bv):
+        return f(xv, bv), (xv, bv)
+
+    def bwd(res, g):
+        xv, bv = res
+        pre = pre_fn(xv, bv if has_bias else None).astype(jnp.float32)
+        dpre = g.astype(jnp.float32) * _act_grad(pre, act)
+        # fold the per-output-channel scale into the cotangent, then dot
+        # against the raw int8 transpose (widened on-chip by the kernel)
+        dscaled = (dpre * w_scale.astype(jnp.float32)).astype(xv.dtype)
+        dx = _pallas_matmul(dscaled, wq.T, None, "none", regime, interpret)
+        if has_bias:
+            db = jnp.sum(dpre, axis=0).astype(bv.dtype)
+            return dx, db
+        return dx, None
+
+    f.defvjp(fwd, bwd)
+    return f(x2d, bias if has_bias else None)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+_TRACE_UNSET = object()     # distinguishes "no per-thread trace" from None
+
+
+class Engine:
+    """Explicit execution engine: configuration + policy + trace + schedule.
+
+    Construct one per deployment (or phase) and either call its methods
+    directly or :meth:`activate` it so model code reaching the module-level
+    shims resolves to it::
+
+        eng = Engine(backend="pallas", interpret=True)
+        with eng.tracing() as tr:
+            y = eng.matmul(x, w, act="relu", name="fc1")
+        print(tr.summary())
+
+    Attach a compiled :class:`~repro.core.schedule.LayerSchedule` with
+    :meth:`with_schedule` and every named op resolves its
+    :class:`~repro.core.dataflow.MatmulPlan` by lookup instead of
+    re-planning at trace time (recorded as ``schedule="hit"``).
+    """
+
+    def __init__(self, *, backend: str = "xla", interpret: bool = True,
+                 chip: Optional[TPUChip] = None,
+                 policy: Optional[DispatchPolicy] = None,
+                 schedule: Optional["Any"] = None,
+                 trace: Optional[DispatchTrace] = None) -> None:
+        if policy is None:
+            policy = DispatchPolicy(chip=chip if chip is not None
+                                    else TPU_V5E)
+        elif chip is not None and chip is not policy.chip:
+            policy = dataclasses.replace(policy, chip=chip)
+        self.policy = policy
+        self.backend = backend
+        self.interpret = interpret
+        self.schedule = schedule
+        # constructor-supplied trace is shared across threads (derived
+        # engines); tracing() overlays a per-thread trace on top so
+        # concurrent tracing() users of one engine stay isolated, like the
+        # old thread-local engine state
+        self._trace_default = trace
+        self._trace_tls = threading.local()
+
+    @property
+    def trace(self) -> Optional[DispatchTrace]:
+        tls = getattr(self._trace_tls, "trace", _TRACE_UNSET)
+        return self._trace_default if tls is _TRACE_UNSET else tls
+
+    @trace.setter
+    def trace(self, tr: Optional[DispatchTrace]) -> None:
+        self._trace_tls.trace = tr
+
+    @property
+    def chip(self) -> TPUChip:
+        return self.policy.chip
+
+    # -- derivation ---------------------------------------------------------
+    def with_(self, **overrides: Any) -> "Engine":
+        """A derived engine sharing this engine's live trace."""
+        kw = dict(backend=self.backend, interpret=self.interpret,
+                  policy=self.policy, schedule=self.schedule,
+                  trace=self.trace)
+        kw.update(overrides)
+        return Engine(**kw)
+
+    def with_schedule(self, schedule) -> "Engine":
+        return self.with_(schedule=schedule)
+
+    # -- context ------------------------------------------------------------
+    @contextlib.contextmanager
+    def activate(self):
+        """Make this the engine that module-level shims resolve to."""
+        stack = _engine_stack()
+        stack.append(self)
+        try:
+            yield self
+        finally:
+            stack.pop()
+
+    @contextlib.contextmanager
+    def tracing(self):
+        """Collect dispatch records into a fresh :class:`DispatchTrace`.
+        Per-thread: concurrent ``tracing()`` entries on a shared engine do
+        not see each other's records."""
+        prev = getattr(self._trace_tls, "trace", _TRACE_UNSET)
+        tr = DispatchTrace()
+        self._trace_tls.trace = tr
+        try:
+            yield tr
+        finally:
+            if prev is _TRACE_UNSET:
+                del self._trace_tls.trace
+            else:
+                self._trace_tls.trace = prev
+
+    def record(self, **kw: Any) -> None:
+        """Append a :class:`DispatchRecord` to the live trace (no-op when
+        not tracing).  Public for ops that execute outside ``matmul`` /
+        ``attention`` but still belong in the dispatch picture (e.g. the
+        MoE per-expert einsums)."""
+        if self.trace is not None:
+            self.trace.append(DispatchRecord(**kw))
+
+    # internal alias
+    _record = record
+
+    # -- planning -----------------------------------------------------------
+    def plan_for(self, name: str, m: int, n: int, k: int, *,
+                 dtype, weight_dtype) -> Tuple[MatmulPlan, str]:
+        """(plan, 'hit'|'miss'|'') for one named op — schedule lookup with
+        policy fallback."""
+        act_bytes = jnp.dtype(dtype).itemsize
+        w_bytes = jnp.dtype(weight_dtype).itemsize
+        state = ""
+        if self.schedule is not None:
+            plan = self.schedule.lookup(name, m, n, k, str(jnp.dtype(dtype)),
+                                        str(jnp.dtype(weight_dtype)))
+            if plan is not None:
+                return plan, "hit"
+            state = "miss"
+        regime = self.policy.regime_for(name, m, n, k, act_bytes=act_bytes,
+                                        weight_bytes=w_bytes)
+        plan = self.policy.plan(m, n, k, act_bytes=act_bytes,
+                                weight_bytes=w_bytes, regime=regime)
+        return plan, state
+
+    # -- ops ----------------------------------------------------------------
+    def matmul(self, x: jax.Array, w, bias: Optional[jax.Array] = None, *,
+               act: str = "none", name: str = "matmul",
+               out_dtype=None) -> jax.Array:
+        """``(..., k) @ (k, n)`` with fused bias+activation epilogue, routed
+        to the SA-CONV or SA-FC dataflow by the engine's policy/schedule.
+
+        ``w`` may be a :class:`repro.core.quant.QTensor` (int8 + per-channel
+        scales — the paper's 8-bit fixed point): the int8 weights reach the
+        kernel un-dequantized and the per-channel scale fuses into the
+        accumulator-flush epilogue, so HBM moves 1 byte/weight."""
+        from repro.core.quant import QTensor
+        if isinstance(w, QTensor):
+            wq, w_scale = w.q, w.scale.reshape(1, -1)
+        else:
+            wq, w_scale = w, None
+        *lead, k = x.shape
+        n = wq.shape[-1]
+        m = 1
+        for s in lead:
+            m *= s
+        plan, sched = self.plan_for(name, m, n, k, dtype=x.dtype,
+                                    weight_dtype=wq.dtype)
+        self._record(name=name, regime=plan.regime, m=m, n=n, k=k,
+                     case=plan.case, backend=self.backend,
+                     dtype=str(x.dtype), weight_dtype=str(wq.dtype),
+                     schedule=sched, plan=plan)
+
+        x2d = x.reshape(m, k)
+        out_dt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
+        if self.backend == "pallas":
+            if w_scale is not None:
+                # frozen quantized weights: differentiable in x/bias only
+                out = _quantized_pallas_matmul(x2d, wq, w_scale, bias, act,
+                                               plan.regime, self.interpret,
+                                               plan, out_dt)
+            elif bias is not None:
+                fn = _make_pallas_vjp(act, plan.regime, self.interpret,
+                                      True, out_dt, plan)
+                out = fn(x2d, wq, bias)
+            else:
+                fn = _make_pallas_vjp(act, plan.regime, self.interpret,
+                                      False, out_dt, plan)
+                out = fn(x2d, wq)
+        else:
+            out = ref.matmul_bias_act(x2d, wq, bias, act=act,
+                                      out_dtype=out_dt, w_scale=w_scale)
+        # dtype was applied exactly once (kernel epilogue / oracle); the
+        # reshape below must not re-cast.
+        return out.reshape(*lead, n)
+
+    def attention(self, q, k, v, *, causal=True, window=0, softcap=0.0,
+                  scale=None, name="attn"):
+        """Blocked attention; pallas flash kernel or the jnp oracle."""
+        self._record(name=name, regime="attention", m=q.shape[1],
+                     n=k.shape[1], k=q.shape[-1], case=0,
+                     backend=self.backend, dtype=str(q.dtype))
+        if self.backend == "pallas":
+            from repro.kernels.attention import flash_attention
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=softcap, scale=scale,
+                                   interpret=self.interpret)
+        return ref.attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+
+    def __repr__(self) -> str:
+        return (f"Engine(backend={self.backend!r}, "
+                f"interpret={self.interpret}, policy={self.policy}, "
+                f"schedule={'yes' if self.schedule is not None else 'no'})")
+
+
+# ---------------------------------------------------------------------------
+# current-engine stack (explicit successor of the old hidden _STATE)
+# ---------------------------------------------------------------------------
+_LOCAL = threading.local()
+_DEFAULT = Engine()
+
+
+def _engine_stack() -> List[Engine]:
+    stack = getattr(_LOCAL, "stack", None)
+    if stack is None:
+        stack = _LOCAL.stack = []
+    return stack
+
+
+def current() -> Engine:
+    """The innermost :meth:`Engine.activate`-d engine, else the module
+    default (xla backend, default policy)."""
+    stack = _engine_stack()
+    return stack[-1] if stack else _DEFAULT
+
+
+def default_engine() -> Engine:
+    return _DEFAULT
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims (legacy module-level API)
+# ---------------------------------------------------------------------------
 def matmul(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
            act: str = "none", name: str = "matmul",
            out_dtype=None) -> jax.Array:
-    """``(..., k) @ (k, n)`` with fused bias+activation epilogue, routed to
-    the SA-CONV or SA-FC dataflow by arithmetic intensity.
-
-    ``w`` may be a :class:`repro.core.quant.QTensor` (int8 + per-channel
-    scales — the paper's 8-bit fixed point): dequantization fuses into the
-    dot, so HBM moves 1 byte/weight in the SA-FC regime."""
-    from repro.core.quant import QTensor, dequantize
-    if isinstance(w, QTensor):
-        w = dequantize(w, x.dtype)
-    *lead, k = x.shape
-    n = w.shape[-1]
-    m = 1
-    for s in lead:
-        m *= s
-    regime = dataflow.classify_regime(m, n, k, x.dtype.itemsize)
-    plan = dataflow.plan_matmul(m, n, k, bytes_in=x.dtype.itemsize)
-    _record(name=name, regime=regime, m=m, n=n, k=k, case=plan.case,
-            backend=_STATE.backend)
-
-    x2d = x.reshape(m, k)
-    if _STATE.backend == "pallas":
-        fn = _make_pallas_vjp(act, regime, _STATE.interpret, bias is not None)
-        out = fn(x2d, w, bias if bias is not None else jnp.zeros((), x.dtype))
-    else:
-        out = ref.matmul_bias_act(x2d, w, bias, act=act,
-                                  out_dtype=out_dtype or x.dtype)
-    return out.reshape(*lead, n).astype(out_dtype or x.dtype)
+    """Deprecated shim: ``current().matmul(...)``."""
+    return current().matmul(x, w, bias, act=act, name=name,
+                            out_dtype=out_dtype)
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0,
               scale=None, name="attn"):
-    """Blocked attention; pallas flash kernel or the jnp oracle."""
-    _record(name=name, regime="attention", m=q.shape[1], n=k.shape[1],
-            k=q.shape[-1], case=0, backend=_STATE.backend)
-    if _STATE.backend == "pallas":
-        from repro.kernels.attention import flash_attention
-        return flash_attention(q, k, v, causal=causal, window=window,
-                               softcap=softcap, scale=scale,
-                               interpret=_STATE.interpret)
-    return ref.attention(q, k, v, causal=causal, window=window,
-                         softcap=softcap, scale=scale)
+    """Deprecated shim: ``current().attention(...)``."""
+    return current().attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap, scale=scale, name=name)
+
+
+@contextlib.contextmanager
+def execution(backend: str = "xla", interpret: bool = True):
+    """Deprecated shim: activate a derived engine with these overrides.
+    Prefer constructing an :class:`Engine` and calling its methods."""
+    eng = current().with_(backend=backend, interpret=interpret)
+    with eng.activate():
+        yield eng
+
+
+@contextlib.contextmanager
+def dispatch_trace():
+    """Deprecated shim: collect dispatch records from ops issued inside the
+    context.  Prefer ``with engine.tracing() as tr``.
+
+    Activates a *derived* engine carrying a fresh trace rather than
+    mutating the shared default — the activation stack is thread-local, so
+    concurrent shim users stay isolated (the old ``_EngineState``
+    thread-local guarantee)."""
+    tr = DispatchTrace()
+    with current().with_(trace=tr).activate():
+        yield tr

@@ -164,6 +164,35 @@ def fig12b_mpna_speedup(net: str = "alexnet",
 
 
 # ---------------------------------------------------------------------------
+# the paper's offline per-layer schedule (Sec. V): each layer is assigned
+# an array + dataflow case before execution.  This is the ASIC twin of
+# repro.core.schedule.LayerSchedule (the framework-side compiled schedule).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class LayerAssignment:
+    layer: str
+    array: str                  # 'sa_conv' | 'sa_fc'
+    case: int                   # dataflow scenario 1..4
+
+
+def offline_layer_schedule(net: str,
+                           mpna: MPNAConfig = MPNA_PAPER
+                           ) -> tuple[LayerAssignment, ...]:
+    """Tabulate the per-layer (array, case) schedule for a CNN: CONV layers
+    run weight-stationary on SA-CONV with the Fig. 9 buffer-fit case; FC
+    layers (weight reuse = 1) run weight-streaming on SA-FC, always the
+    fully-streamed scenario (weights fetched once, Case 4 bookkeeping)."""
+    out = []
+    for l in network_stats(net):
+        if l.kind == "conv":
+            out.append(LayerAssignment(l.name, "sa_conv",
+                                       classify_case(l, mpna)))
+        else:
+            out.append(LayerAssignment(l.name, "sa_fc", 4))
+    return tuple(out)
+
+
+# ---------------------------------------------------------------------------
 # DRAM-traffic model (dataflow Cases 1-4)
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)

@@ -9,9 +9,14 @@ weights cut the dominant decode memory term ~2x vs bf16 (4x vs f32) at
 <1% logit error (symmetric per-output-channel scales).
 
 `QTensor` is a pytree, so a quantized parameter tree flows through jit /
-shardings / checkpointing unchanged; `repro.core.engine.matmul` detects it
-and dequantizes into the dot (on TPU the convert+scale fuses into the
-matmul read: HBM moves int8)."""
+shardings / checkpointing unchanged; ``Engine.matmul``
+(:mod:`repro.core.engine`) detects it and hands the int8 weights to the
+SA-CONV/SA-FC Pallas kernels **un-dequantized** — the per-output-channel
+scale fuses into the kernels' accumulator-flush epilogue, so HBM moves
+exactly 1 byte/weight and the dispatch policy classifies the regime at
+1 byte/weight.  No dequantized copy of the weight matrix is ever
+materialized on either backend (the XLA oracle path fuses the convert
+into the dot's operand read)."""
 from __future__ import annotations
 
 from typing import Any, NamedTuple

@@ -457,6 +457,21 @@ def terms_from_compiled(compiled, chips: int,
                          model_flops=model_flops)
 
 
+def terms_from_schedule(schedule, chips: int = 1,
+                        model_flops: float = 0.0) -> RooflineTerms:
+    """Roofline terms from a compiled
+    :class:`repro.core.schedule.LayerSchedule`: sums each scheduled op's
+    planner-analytic FLOPs and HBM traffic (the offline counterpart of the
+    HLO-derived terms above — what the schedule *commits to* before any
+    lowering; no collective term, single-chip analytic view)."""
+    flops = float(sum(p.flops for p in schedule.values()))
+    hbm = float(sum(p.hbm_bytes for p in schedule.values()))
+    return RooflineTerms(flops_per_chip=flops / chips,
+                         hbm_bytes_per_chip=hbm / chips,
+                         wire_bytes_per_chip=0.0, chips=chips,
+                         model_flops=model_flops)
+
+
 def model_flops_train(n_active_params: int, tokens: int) -> float:
     return 6.0 * n_active_params * tokens
 

@@ -1,0 +1,190 @@
+"""Compiled per-model layer schedules — the paper's offline schedule table.
+
+MPNA assigns each layer to an array (SA-CONV vs SA-FC) and a dataflow case
+(1–4) *before* execution (Sec. V): the schedule is a per-network artifact,
+computed once, inspected, and reused.  :class:`LayerSchedule` is that
+artifact for this framework: an immutable mapping from named ops
+``(name, m, n, k, dtype, weight_dtype)`` to
+:class:`~repro.core.dataflow.MatmulPlan`, compiled once per
+(model config, phase, shapes, policy) and memoized.
+
+Compilation is a shape-only abstract trace (``jax.eval_shape``) of the
+phase function — ``train`` (loss), ``prefill`` or ``decode`` — under a
+collecting :class:`~repro.core.engine.Engine`; no arrays are allocated.
+An :class:`~repro.core.engine.Engine` carrying a schedule resolves every
+named matmul by lookup (``schedule="hit"`` in the trace) instead of
+re-classifying at trace time; ops the schedule has never seen fall back to
+the engine's policy (``schedule="miss"``).
+
+The perf-model twin for the paper's ASIC is
+:func:`repro.core.perf_model.offline_layer_schedule`, which tabulates the
+same decision per CONV/FC layer of AlexNet/VGG-16 against the Table II
+buffer sizes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from types import MappingProxyType
+from typing import Any, Dict, Iterator, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dataflow import MatmulPlan
+from repro.core.engine import DispatchPolicy, Engine
+
+PHASES = ("train", "prefill", "decode")
+
+
+@dataclass(frozen=True)
+class OpKey:
+    """Identity of one scheduled op."""
+    name: str
+    m: int
+    n: int
+    k: int
+    dtype: str
+    weight_dtype: str
+
+
+class LayerSchedule(Mapping):
+    """Immutable compiled mapping ``OpKey -> MatmulPlan`` for one phase."""
+
+    def __init__(self, phase: str, policy: DispatchPolicy,
+                 entries: Dict[OpKey, MatmulPlan]) -> None:
+        self.phase = phase
+        self.policy = policy
+        self._entries = MappingProxyType(dict(entries))
+
+    # -- Mapping protocol ---------------------------------------------------
+    def __getitem__(self, key: OpKey) -> MatmulPlan:
+        return self._entries[key]
+
+    def __iter__(self) -> Iterator[OpKey]:
+        return iter(self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __eq__(self, other: Any) -> bool:
+        return (isinstance(other, LayerSchedule)
+                and self.phase == other.phase
+                and self.policy == other.policy
+                and dict(self._entries) == dict(other._entries))
+
+    def __hash__(self) -> int:
+        return hash((self.phase, self.policy,
+                     tuple(sorted(self._entries.items(),
+                                  key=lambda kv: repr(kv[0])))))
+
+    # -- lookup -------------------------------------------------------------
+    def lookup(self, name: str, m: int, n: int, k: int,
+               dtype: str, weight_dtype: str) -> Optional[MatmulPlan]:
+        return self._entries.get(OpKey(name, m, n, k, dtype, weight_dtype))
+
+    def table(self) -> str:
+        """The paper-style schedule table, one line per op."""
+        lines = [f"[{self.phase}] {len(self)} scheduled ops"]
+        for key, plan in self._entries.items():
+            lines.append(
+                f"  {key.name:24s} ({key.m}x{key.k})@({key.k}x{key.n}) "
+                f"w={key.weight_dtype:8s} -> {plan.regime:8s} case {plan.case} "
+                f"tile ({plan.bm},{plan.bn},{plan.bk}) "
+                f"hbm {plan.hbm_bytes / 2**20:.1f} MiB")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:
+        return f"LayerSchedule(phase={self.phase!r}, ops={len(self)})"
+
+    # -- compilation --------------------------------------------------------
+    @classmethod
+    def compile(cls, cfg, phase: str, *,
+                batch: int = 1, seq: int = 128,
+                max_seq: Optional[int] = None,
+                cache_dtype=jnp.bfloat16,
+                policy: Optional[DispatchPolicy] = None,
+                params: Optional[Any] = None) -> "LayerSchedule":
+        """Compile (and memoize) the schedule for ``cfg`` in ``phase``.
+
+        ``phase``: ``train`` (loss over a (batch, seq) token block —
+        with gradient accumulation pass the *microbatch* size), ``prefill``
+        ((batch, seq) prompt against a ``max_seq``-deep cache) or
+        ``decode`` (one token per slot against the cache).  ``params``
+        (optional) supplies the real parameter tree so quantized
+        weight dtypes land in the schedule keys; only its
+        shapes/dtypes are read.  The second call with the same arguments
+        returns the cached object itself."""
+        if phase not in PHASES:
+            raise ValueError(f"phase must be one of {PHASES}, got {phase!r}")
+        if policy is None:
+            policy = DispatchPolicy()
+        key = (cfg, phase, batch, seq, max_seq, str(jnp.dtype(cache_dtype)),
+               policy, _params_fingerprint(params))
+        hit = _CACHE.get(key)
+        if hit is not None:
+            return hit
+        sched = cls(phase, policy,
+                    _collect(cfg, phase, batch, seq, max_seq, cache_dtype,
+                             policy, params))
+        _CACHE[key] = sched
+        return sched
+
+
+_CACHE: Dict[Tuple, LayerSchedule] = {}
+
+
+def clear_schedule_cache() -> None:
+    """Drop every memoized schedule (tests / config hot-reload)."""
+    _CACHE.clear()
+
+
+def _params_fingerprint(params: Any) -> Optional[Tuple]:
+    if params is None:
+        return None
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    return (str(treedef),
+            tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in flat))
+
+
+def _collect(cfg, phase: str, batch: int, seq: int,
+             max_seq: Optional[int], cache_dtype,
+             policy: DispatchPolicy, params) -> Dict[OpKey, MatmulPlan]:
+    """Abstract-trace the phase function under a collecting engine."""
+    # lazy imports: models/serve import repro.core.engine at module load
+    from repro.models import transformer as T
+    from repro.serve import kvcache as KC
+    from repro.serve.serve_step import decode_step, prefill_step
+
+    if params is None:
+        params = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+    ms = max_seq if max_seq is not None else seq + 32
+
+    eng = Engine(backend="xla", policy=policy)
+    with eng.tracing() as tr, eng.activate():
+        if phase == "train":
+            tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+            jax.eval_shape(lambda p, t: T.loss_fn(cfg, p, {"tokens": t}),
+                           params, tokens)
+        elif phase == "prefill":
+            tokens = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+            jax.eval_shape(
+                lambda p, t: prefill_step(cfg, p, {"tokens": t}, ms,
+                                          cache_dtype),
+                params, tokens)
+        else:                                   # decode
+            cache = jax.eval_shape(
+                lambda: KC.init_cache(cfg, batch, ms, dtype=cache_dtype))
+            tok = jax.ShapeDtypeStruct((batch, 1), jnp.int32)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+            jax.eval_shape(
+                lambda p, c, t, i: decode_step(cfg, p, c, t, i),
+                params, cache, tok, pos)
+
+    entries: Dict[OpKey, MatmulPlan] = {}
+    for rec in tr:
+        if rec.plan is None or rec.regime not in ("sa_conv", "sa_fc"):
+            continue
+        entries[OpKey(rec.name, rec.m, rec.n, rec.k, rec.dtype,
+                      rec.weight_dtype)] = rec.plan
+    return entries

@@ -1,0 +1,10 @@
+"""Version compatibility for the Pallas TPU API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``;
+resolve whichever this jax ships, once, for every kernel module."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -40,20 +40,28 @@ def matmul(x: jax.Array, w: jax.Array, *, out_dtype=None) -> jax.Array:
     return acc.astype(out_dtype)
 
 
-def matmul_bias_act(x, w, b=None, act: str = "none", *, out_dtype=None):
+def matmul_bias_act(x, w, b=None, act: str = "none", *, out_dtype=None,
+                    w_scale=None):
     """Matmul with the fused epilogue (the accumulation-unit -> pooling &
     activation path of the paper, collapsed into one pass).
 
     The raw accumulator keeps :data:`_ACCUM`'s dtype (so a row-parallel
     psum crosses the wire at that width); the bias/activation epilogue
-    still computes in f32 — XLA fuses the widen+add+act into one pass."""
+    still computes in f32 — XLA fuses the widen+add+act into one pass.
+
+    ``w`` may be int8 with ``w_scale`` (1, n) per-output-channel dequant
+    scales: the convert fuses into the dot's operand read and the scale
+    multiplies the accumulator (the XLA twin of the Pallas kernels'
+    fused epilogue — no dequantized weight copy in HBM)."""
     if x.dtype != w.dtype:
         w = w.astype(x.dtype)
     acc_dt = _ACCUM["dtype"] if x.dtype == jnp.bfloat16 else jnp.float32
     acc = jnp.matmul(x, w, preferred_element_type=acc_dt)
-    if b is None and act == "none":
+    if b is None and act == "none" and w_scale is None:
         return acc.astype(out_dtype or x.dtype)
     out = acc.astype(jnp.float32)
+    if w_scale is not None:
+        out = out * w_scale.reshape(1, -1).astype(jnp.float32)
     if b is not None:
         out = out + b.astype(jnp.float32)
     out = apply_act(out, act)

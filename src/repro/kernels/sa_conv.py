@@ -11,9 +11,12 @@ Paper mapping (Fig. 7B/C):
   pipelining of the `w` BlockSpec: iteration (i,j,k+1)'s weight DMA overlaps
   iteration (i,j,k)'s matmul because `w`'s index map only depends on grid
   coordinates, making the prefetch address known one step ahead.
-* accumulation-unit -> pooling&activation chain -> fused bias+activation
-  epilogue executed once, on the last K step (the paper's operator
-  reordering: the epilogue touches each output exactly once).
+* accumulation-unit -> pooling&activation chain -> fused
+  scale+bias+activation epilogue executed once, on the last K step (the
+  paper's operator reordering: the epilogue touches each output exactly
+  once).  int8 weights ride the same epilogue: the per-output-channel
+  dequant scale multiplies the fp32 accumulator at flush, so the weight
+  stream stays 1 byte/weight.
 
 Grid order is (m, n, k) with K innermost ("arbitrary") so the accumulator
 never spills — the output-stationary schedule the paper uses for CONV.
@@ -30,31 +33,37 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dataflow import MatmulPlan, plan_matmul
 from repro.kernels import ref
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 
-def _epilogue(acc, bias, act: str):
-    out = acc if bias is None else acc + bias.astype(jnp.float32)
+def _epilogue(acc, scale, bias, act: str):
+    out = acc if scale is None else acc * scale.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
     return ref.apply_act(out, act)
 
 
-def _sa_conv_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool):
-    if has_bias:
-        b_ref, o_ref, acc_ref = rest
-    else:
-        (o_ref, acc_ref), b_ref = rest, None
+def _sa_conv_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool,
+                    has_scale: bool):
+    rest = list(rest)
+    s_ref = rest.pop(0) if has_scale else None
+    b_ref = rest.pop(0) if has_bias else None
+    o_ref, acc_ref = rest
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...].astype(x_ref.dtype),
                             preferred_element_type=jnp.float32)
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _flush():
+        scale = s_ref[...] if has_scale else None
         bias = b_ref[...] if has_bias else None
-        o_ref[...] = _epilogue(acc_ref[...], bias, act).astype(o_ref.dtype)
+        o_ref[...] = _epilogue(acc_ref[...], scale, bias,
+                               act).astype(o_ref.dtype)
 
 
 def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
@@ -70,45 +79,56 @@ def sa_conv_matmul(x: jax.Array, w: jax.Array,
                    bias: Optional[jax.Array] = None, *,
                    act: str = "none",
                    plan: Optional[MatmulPlan] = None,
+                   w_scale: Optional[jax.Array] = None,
                    out_dtype=None,
                    interpret: bool = True) -> jax.Array:
-    """(m,k) @ (k,n) [+ bias, act] through the SA-CONV dataflow.
+    """(m,k) @ (k,n) [+ scale, bias, act] through the SA-CONV dataflow.
 
     ``interpret=True`` is the CPU validation mode; on a real TPU backend the
     same code lowers to Mosaic with the BlockSpecs chosen by the Case-1..4
-    planner (:func:`repro.core.dataflow.plan_matmul`).
+    planner (:func:`repro.core.dataflow.plan_matmul`).  ``w`` may be int8
+    with ``w_scale`` (1, n) per-output-channel scales; dequantization fuses
+    into the accumulator-flush epilogue.
     """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     out_dtype = out_dtype or x.dtype
     if plan is None:
-        plan = plan_matmul(m, n, k, bytes_in=x.dtype.itemsize)
+        plan = plan_matmul(m, n, k, bytes_in=x.dtype.itemsize,
+                           bytes_w=w.dtype.itemsize)
     bm, bn, bk = min(plan.bm, 512), min(plan.bn, 512), min(plan.bk, 512)
 
     gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
     xp = _pad_to(x, gm * bm, gk * bk)
     wp = _pad_to(w, gk * bk, gn * bn)
     has_bias = bias is not None
+    has_scale = w_scale is not None
 
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
     ]
     args = [xp, wp]
+    if has_scale:
+        sp = jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
+                     ((0, 0), (0, gn * bn - n)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(sp)
     if has_bias:
         bp = jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn)
         in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         args.append(bp)
 
     out = pl.pallas_call(
-        functools.partial(_sa_conv_kernel, act=act, has_bias=has_bias),
+        functools.partial(_sa_conv_kernel, act=act, has_bias=has_bias,
+                          has_scale=has_scale),
         grid=(gm, gn, gk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*args)

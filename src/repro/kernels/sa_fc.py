@@ -16,8 +16,14 @@ activations and the fp32 accumulator stay VMEM-resident:
   covers the weight matrix bijectively), double-buffered so the next tile's
   DMA overlaps the current tile's MAC — the per-PE weight-bus analogue;
 * accumulator       -> (b, bn) fp32 scratch carried across the K dimension
-  (the accumulation-unit SPM), flushed through the fused bias+activation
-  epilogue on the last K step.
+  (the accumulation-unit SPM), flushed through the fused
+  scale+bias+activation epilogue on the last K step.
+
+int8 weights (the paper's 8-bit fixed point): ``w`` may be int8 with a
+per-output-channel ``w_scale`` (1, n).  The int8 tile is widened *inside
+the kernel* (VMEM -> registers) and the scale multiplies the fp32
+accumulator once, at flush — so HBM moves exactly 1 byte/weight and no
+dequantized copy of the weight matrix ever exists.
 
 The block shapes are chosen by the planner for *bandwidth*, not MXU
 occupancy: large contiguous (bk, bn) weight tiles; nothing is re-read.
@@ -33,28 +39,33 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels import ref
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 SUBLANE = 16
 
 
-def _sa_fc_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool):
-    if has_bias:
-        b_ref, o_ref, acc_ref = rest
-    else:
-        (o_ref, acc_ref), b_ref = rest, None
+def _sa_fc_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool,
+                  has_scale: bool):
+    rest = list(rest)
+    s_ref = rest.pop(0) if has_scale else None
+    b_ref = rest.pop(0) if has_bias else None
+    o_ref, acc_ref = rest
     kk = pl.program_id(1)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # One streamed weight tile: consumed once, never revisited.
-    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+    # One streamed weight tile: consumed once, never revisited.  int8 tiles
+    # widen here, on-chip — the raw int8 accumulator is rescaled at flush.
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...].astype(x_ref.dtype),
                             preferred_element_type=jnp.float32)
 
     @pl.when(kk == pl.num_programs(1) - 1)
     def _flush():
         out = acc_ref[...]
+        if has_scale:
+            out = out * s_ref[...].astype(jnp.float32)
         if has_bias:
             out = out + b_ref[...].astype(jnp.float32)
         o_ref[...] = ref.apply_act(out, act).astype(o_ref.dtype)
@@ -66,6 +77,7 @@ def sa_fc_matmul(x: jax.Array, w: jax.Array,
                  bias: Optional[jax.Array] = None, *,
                  act: str = "none",
                  bn: int = 512, bk: int = 512,
+                 w_scale: Optional[jax.Array] = None,
                  out_dtype=None,
                  interpret: bool = True) -> jax.Array:
     """(b,k) @ (k,n) for small b — weight-streaming dataflow.
@@ -73,6 +85,9 @@ def sa_fc_matmul(x: jax.Array, w: jax.Array,
     Grid is (n-tiles, k-tiles) with K innermost: each weight tile is read
     from HBM exactly once; total weight traffic = k*n*itemsize bytes, the
     compulsory minimum (the paper's "fetch the weights once only").
+
+    ``w`` may be int8 with ``w_scale`` (1, n) per-output-channel scales;
+    dequantization fuses into the accumulator-flush epilogue.
     """
     b, k = x.shape
     k2, n = w.shape
@@ -87,25 +102,32 @@ def sa_fc_matmul(x: jax.Array, w: jax.Array,
     xp = jnp.pad(x, ((0, bp - b), (0, gk * bk - k)))
     wp = jnp.pad(w, ((0, gk * bk - k), (0, gn * bn - n)))
     has_bias = bias is not None
+    has_scale = w_scale is not None
 
     in_specs = [
         pl.BlockSpec((bp, bk), lambda j, kk: (0, kk)),     # acts: resident rows
         pl.BlockSpec((bk, bn), lambda j, kk: (kk, j)),     # weights: streamed
     ]
     args = [xp, wp]
+    if has_scale:
+        sp = jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
+                     ((0, 0), (0, gn * bn - n)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda j, kk: (0, j)))
+        args.append(sp)
     if has_bias:
         biasp = jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn)
         in_specs.append(pl.BlockSpec((1, bn), lambda j, kk: (0, j)))
         args.append(biasp)
 
     out = pl.pallas_call(
-        functools.partial(_sa_fc_kernel, act=act, has_bias=has_bias),
+        functools.partial(_sa_fc_kernel, act=act, has_bias=has_bias,
+                          has_scale=has_scale),
         grid=(gn, gk),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bp, bn), lambda j, kk: (0, j)),
         out_shape=jax.ShapeDtypeStruct((bp, gn * bn), out_dtype),
         scratch_shapes=[pltpu.VMEM((bp, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(*args)

@@ -1,8 +1,8 @@
 """Attention blocks: GQA, sliding-window (ring KV cache), logit softcap,
 cross-attention (enc-dec).
 
-Train/prefill attention goes through :func:`repro.core.engine.attention`
-(flash kernel or jnp oracle).  Decode attends a query of one token against
+Train/prefill attention goes through the active
+:class:`repro.core.engine.Engine` (flash kernel or jnp oracle).  Decode attends a query of one token against
 the cache with an explicit validity mask — global layers keep a full-length
 cache, ATTN_LOCAL layers keep a **ring cache of size == window**, which is
 what bounds KV memory for the 500k-context cells (mixtral/gemma local
@@ -32,14 +32,15 @@ def init_attn(cfg, key, dtype) -> dict:
 
 
 def _proj_qkv(cfg, p, x, x_kv=None):
+    eng = engine.current()
     b, s, _ = x.shape
     hd = cfg.hd
     xkv = x if x_kv is None else x_kv
     skv = xkv.shape[1]
-    q = engine.matmul(x, p["wq"], name="attn.q").reshape(b, s, cfg.n_heads, hd)
-    k = engine.matmul(xkv, p["wk"], name="attn.k").reshape(
+    q = eng.matmul(x, p["wq"], name="attn.q").reshape(b, s, cfg.n_heads, hd)
+    k = eng.matmul(xkv, p["wk"], name="attn.k").reshape(
         b, skv, cfg.n_kv_heads, hd)
-    v = engine.matmul(xkv, p["wv"], name="attn.v").reshape(
+    v = eng.matmul(xkv, p["wv"], name="attn.v").reshape(
         b, skv, cfg.n_kv_heads, hd)
     # pin head sharding across the reshape (see sharding.constrain docstring)
     q = _constrain_q(cfg, q)
@@ -133,6 +134,7 @@ def attn_forward(cfg, p: dict, x: jax.Array, pos_ids: jax.Array, *,
                  softcap: Optional[float] = None,
                  return_kv: bool = False):
     """Full-sequence (train / prefill) attention."""
+    eng = engine.current()
     b, s, _ = x.shape
     q, k, v = _proj_qkv(cfg, p, x, x_kv)
     if use_rope:
@@ -142,9 +144,9 @@ def attn_forward(cfg, p: dict, x: jax.Array, pos_ids: jax.Array, *,
     sc = cfg.attn_softcap if softcap is None else softcap
     q, hq = _pad_heads(cfg, q)
     q = _constrain_q(cfg, q)
-    out = engine.attention(q, k, v, causal=causal, window=window, softcap=sc)
+    out = eng.attention(q, k, v, causal=causal, window=window, softcap=sc)
     out = out[:, :, :hq, :]                      # drop padded heads
-    out = engine.matmul(out.reshape(b, s, -1), p["wo"], name="attn.o")
+    out = eng.matmul(out.reshape(b, s, -1), p["wo"], name="attn.o")
     if return_kv:
         return out, (k, v)
     return out
@@ -166,24 +168,25 @@ def attn_decode(cfg, p: dict, x: jax.Array, pos: jax.Array, cache: dict, *,
     Self-attention: project k/v for the new token, write into the (ring)
     cache, attend against every valid slot.  Cross-attention: attend the
     precomputed encoder k/v, cache untouched."""
+    eng = engine.current()
     b = x.shape[0]
     hd = cfg.hd
     sc = cfg.attn_softcap if softcap is None else softcap
 
-    q = engine.matmul(x, p["wq"], name="attn.q").reshape(b, 1, cfg.n_heads, hd)
+    q = eng.matmul(x, p["wq"], name="attn.q").reshape(b, 1, cfg.n_heads, hd)
 
     if cross_kv is not None:
         k, v = cross_kv
         kv_mask = jnp.ones((k.shape[1],), bool)
         out = masked_attention(q, k, v, kv_mask, softcap=sc)
-        out = engine.matmul(out.reshape(b, 1, -1), p["wo"], name="attn.o")
+        out = eng.matmul(out.reshape(b, 1, -1), p["wo"], name="attn.o")
         return out, cache
 
     posv = jnp.full((b, 1), pos, jnp.int32)
     q = rope(q, posv, cfg.rope_theta)
-    k_new = engine.matmul(x, p["wk"], name="attn.k").reshape(
+    k_new = eng.matmul(x, p["wk"], name="attn.k").reshape(
         b, 1, cfg.n_kv_heads, hd)
-    v_new = engine.matmul(x, p["wv"], name="attn.v").reshape(
+    v_new = eng.matmul(x, p["wv"], name="attn.v").reshape(
         b, 1, cfg.n_kv_heads, hd)
     k_new = rope(k_new, posv, cfg.rope_theta)
 
@@ -196,5 +199,5 @@ def attn_decode(cfg, p: dict, x: jax.Array, pos: jax.Array, cache: dict, *,
     idx = jnp.arange(size)
     kv_mask = jnp.where(pos >= size, jnp.ones((size,), bool), idx <= pos)
     out = masked_attention(q, kc, vc, kv_mask, softcap=sc)
-    out = engine.matmul(out.reshape(b, 1, -1), p["wo"], name="attn.o")
+    out = eng.matmul(out.reshape(b, 1, -1), p["wo"], name="attn.o")
     return out, {"k": kc, "v": vc}

@@ -146,10 +146,20 @@ def init_cnn(name: str, key, *, in_res: Optional[int] = None, in_ch: int = 3,
 
 
 def cnn_forward(name: str, params: list, x: jax.Array, *,
-                backend: str = "pallas", interpret: bool = True) -> jax.Array:
-    """x: (N, H, W, C) -> logits (N, classes)."""
+                backend: str = "pallas", interpret: bool = True,
+                eng: Optional[engine.Engine] = None) -> jax.Array:
+    """x: (N, H, W, C) -> logits (N, classes).
+
+    Supply ``eng`` to run the whole network under an explicit
+    :class:`~repro.core.engine.Engine` (its backend/interpret then govern
+    the CONV kernels too, overriding the ``backend``/``interpret`` args);
+    otherwise one is derived from the ambient engine so an active trace /
+    policy / schedule still sees the FC dispatches."""
     spec, _ = NETWORKS[name]
-    use_pallas = backend == "pallas"
+    if eng is None:
+        eng = engine.current().with_(backend=backend, interpret=interpret)
+    use_pallas = eng.backend == "pallas"
+    interpret = eng.interpret
     for s, p in zip(spec, params):
         if s.kind == "conv":
             if s.pad:
@@ -172,7 +182,5 @@ def cnn_forward(name: str, params: list, x: jax.Array, *,
                 x = ref.maxpool2d(x, window=s.kernel, stride=s.stride)
         else:
             x = x.reshape(x.shape[0], -1)
-            with engine.execution("pallas" if use_pallas else "xla",
-                                  interpret=interpret):
-                x = engine.matmul(x, p["w"], p["b"], act=s.act, name="fc")
+            x = eng.matmul(x, p["w"], p["b"], act=s.act, name="fc")
     return x

@@ -1,7 +1,10 @@
 """Elementary model layers (norms, RoPE, embeddings, inits).
 
-All dense projections go through :func:`repro.core.engine.matmul` so the
-MPNA heterogeneous dispatch sees every matmul in every architecture.
+All dense projections go through the active
+:class:`repro.core.engine.Engine` (``engine.current().matmul``) so the
+MPNA heterogeneous dispatch — and any compiled
+:class:`~repro.core.schedule.LayerSchedule` — sees every matmul in every
+architecture.
 """
 from __future__ import annotations
 
@@ -104,7 +107,7 @@ def embed(params, tokens: jax.Array, *, scale: bool, d: int,
 
 def unembed(cfg, params, x: jax.Array) -> jax.Array:
     w = params["embed"].T if cfg.tie_embeddings else params["head"]
-    logits = engine.matmul(x, w, name="lm_head", out_dtype=jnp.float32)
+    logits = engine.current().matmul(x, w, name="lm_head", out_dtype=jnp.float32)
     if cfg.logit_softcap > 0.0:
         c = cfg.logit_softcap
         logits = c * jnp.tanh(logits / c)

@@ -20,10 +20,11 @@ def init_mlp(cfg, key, d: int, ff: int, dtype) -> dict:
 
 
 def mlp(cfg, p: dict, x: jax.Array, name: str = "mlp") -> jax.Array:
+    eng = engine.current()
     if cfg.mlp in ("swiglu", "geglu"):
         act = "silu" if cfg.mlp == "swiglu" else "gelu"
-        g = engine.matmul(x, p["wg"], act=act, name=f"{name}.gate")
-        u = engine.matmul(x, p["wu"], name=f"{name}.up")
-        return engine.matmul(g * u, p["wd"], name=f"{name}.down")
-    h = engine.matmul(x, p["w1"], act="gelu", name=f"{name}.fc1")
-    return engine.matmul(h, p["w2"], name=f"{name}.fc2")
+        g = eng.matmul(x, p["wg"], act=act, name=f"{name}.gate")
+        u = eng.matmul(x, p["wu"], name=f"{name}.up")
+        return eng.matmul(g * u, p["wd"], name=f"{name}.down")
+    h = eng.matmul(x, p["w1"], act="gelu", name=f"{name}.fc1")
+    return eng.matmul(h, p["w2"], name=f"{name}.fc2")

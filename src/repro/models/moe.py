@@ -58,7 +58,7 @@ def _route(cfg, p, xf, name):
     """Shared router: returns (vals (T,k), idx (T,k), aux loss)."""
     m = cfg.moe
     E, k = m.n_experts, m.top_k
-    logits = engine.matmul(xf.astype(jnp.float32), p["router"],
+    logits = engine.current().matmul(xf.astype(jnp.float32), p["router"],
                            name=f"{name}.router", out_dtype=jnp.float32)
     gates = jax.nn.softmax(logits, axis=-1)
     vals, idx = jax.lax.top_k(gates, k)
@@ -92,7 +92,7 @@ def _expert_ffn(cfg, p, xe, name):
     """xe: (E, C, d) -> (E, C, d) through the per-expert SwiGLU/GeGLU."""
     cd = xe.dtype
     wg = _w(p, "wg", cd)
-    engine._record(name=f"{name}.experts",
+    engine.current().record(name=f"{name}.experts",
                    regime=dataflow.classify_regime(
                        xe.shape[1], wg.shape[-1], xe.shape[-1]),
                    m=xe.shape[1], n=wg.shape[-1], k=xe.shape[-1],
@@ -160,7 +160,7 @@ def _moe_scatter_grouped(cfg, p, xg, vals, idx, C, name):
     xe = constrain(xe, ("dp", None, None, None))
 
     wg = _w(p, "wg", cd)
-    engine._record(name=f"{name}.experts",
+    engine.current().record(name=f"{name}.experts",
                    regime=dataflow.classify_regime(C, wg.shape[-1], d),
                    m=C, n=wg.shape[-1], k=d, case=0, backend="xla")
     act = "silu" if cfg.mlp == "swiglu" else "gelu"

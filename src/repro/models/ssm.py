@@ -147,8 +147,9 @@ def mamba_forward(cfg, p: dict, x: jax.Array, *,
                   cache: Optional[dict] = None,
                   return_cache: bool = False):
     """x: (B,S,d).  cache={'conv': (B,cw-1,ch), 'h': (B,H,D,N)} for decode."""
+    eng = engine.current()
     s = cfg.ssm
-    zxbcdt = engine.matmul(x, p["in_proj"], name="ssm.in_proj")
+    zxbcdt = eng.matmul(x, p["in_proj"], name="ssm.in_proj")
     z, xbc, dt, di, ns, nh = _split(cfg, zxbcdt)
     hd = s.head_dim
 
@@ -173,7 +174,7 @@ def mamba_forward(cfg, p: dict, x: jax.Array, *,
     y = y.reshape(B_, S_, di)
     y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
                 p["norm_w"])
-    out = engine.matmul(y, p["out_proj"], name="ssm.out_proj")
+    out = eng.matmul(y, p["out_proj"], name="ssm.out_proj")
     if return_cache or cache is not None:
         return out, {"conv": conv_tail, "h": h}
     return out, None

@@ -7,7 +7,13 @@ the SA-FC regime the paper builds its second array for: per-step weight
 reuse = active_slots, far below the ridge point, so the engine's value is
 keeping slots full (reuse up) — the batching policy is the software
 analogue of MPNA's time-multiplexing of SA-FC between FC and CONV work.
-"""
+
+Execution goes through an explicit :class:`repro.core.engine.Engine`
+carrying a compiled :class:`repro.core.schedule.LayerSchedule` per phase
+(prefill / decode), mirroring the paper's offline per-layer schedule:
+every named matmul resolves its array + dataflow case by lookup, and the
+schedules are memoized so repeated waves of the same shape reuse the same
+compiled object."""
 from __future__ import annotations
 
 import dataclasses
@@ -18,6 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import Engine
+from repro.core.schedule import LayerSchedule
 from repro.models import transformer as T
 from repro.serve import kvcache as KC
 from repro.serve.serve_step import decode_step, prefill_step
@@ -34,17 +42,29 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
-                 max_seq: int = 256, cache_dtype=jnp.float32):
+                 max_seq: int = 256, cache_dtype=jnp.float32,
+                 engine: Optional[Engine] = None):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
         self.max_seq = max_seq
         self.cache_dtype = cache_dtype
+        self.engine = engine if engine is not None else Engine()
+        # the per-phase offline schedule for the configured batch size;
+        # odd-sized admission waves compile (memoized) variants on demand
+        self.decode_schedule = self._schedule("decode", batch_size)
         self._prefill = jax.jit(
             lambda p, b: prefill_step(cfg, p, b, max_seq, cache_dtype))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
         self.queue: List[Request] = []
+
+    def _schedule(self, phase: str, batch: int,
+                  seq: int = 1) -> LayerSchedule:
+        return LayerSchedule.compile(
+            self.cfg, phase, batch=batch, seq=seq, max_seq=self.max_seq,
+            cache_dtype=self.cache_dtype, policy=self.engine.policy,
+            params=self.params)
 
     def submit(self, req: Request) -> None:
         self.queue.append(req)
@@ -75,17 +95,22 @@ class ServeEngine:
             toks = np.zeros((B, S), np.int32)
             for i, r in enumerate(wave):
                 toks[i, S - len(r.prompt):] = r.prompt
-            logits, cache = self._prefill(self.params,
-                                          {"tokens": jnp.asarray(toks)})
+            psched = self._schedule("prefill", B, S)
+            with self.engine.with_schedule(psched).activate():
+                logits, cache = self._prefill(self.params,
+                                              {"tokens": jnp.asarray(toks)})
             n_steps = max(r.max_new for r in wave)
             outs = np.zeros((B, n_steps), np.int32)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
             outs[:, 0] = np.asarray(tok[:, 0])
-            for i in range(1, n_steps):
-                logits, cache = self._decode(self.params, cache, tok,
-                                             jnp.int32(S + i - 1))
-                tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-                outs[:, i] = np.asarray(tok[:, 0])
+            dsched = (self.decode_schedule if B == self.batch_size
+                      else self._schedule("decode", B))
+            with self.engine.with_schedule(dsched).activate():
+                for i in range(1, n_steps):
+                    logits, cache = self._decode(self.params, cache, tok,
+                                                 jnp.int32(S + i - 1))
+                    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+                    outs[:, i] = np.asarray(tok[:, 0])
             for i, r in enumerate(wave):
                 r.output = outs[i, :r.max_new]
                 r.done = True

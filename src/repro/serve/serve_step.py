@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.engine import Engine
 from repro.models import transformer as T
 from repro.serve import kvcache as KC
 
@@ -35,23 +36,36 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
 def greedy_generate(cfg: ModelConfig, params: dict, prompt: jax.Array,
                     n_steps: int, *, max_seq: Optional[int] = None,
                     extra: Optional[dict] = None,
-                    cache_dtype=jnp.float32) -> jax.Array:
-    """Reference sampling loop (tests/examples).  prompt: (B, S)."""
+                    cache_dtype=jnp.float32,
+                    engine: Optional[Engine] = None) -> jax.Array:
+    """Reference sampling loop (tests/examples).  prompt: (B, S).
+
+    ``engine`` (optional) executes the loop under an explicit
+    :class:`~repro.core.engine.Engine` — its policy, schedule, and trace
+    apply to every projection in prefill and decode."""
     B, S = prompt.shape
     vt = cfg.vision_tokens if (extra and "vision_embeds" in extra) else 0
     max_seq = max_seq or (S + vt + n_steps)
     batch = {"tokens": prompt, **(extra or {})}
-    last_logits, cache = prefill_step(cfg, params, batch, max_seq,
-                                      cache_dtype)
 
-    def body(carry, i):
-        tok, cache = carry
-        logits, cache = decode_step(cfg, params, cache, tok,
-                                    S + vt + i)
-        nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
-        return (nxt, cache), nxt[:, 0]
+    def generate():
+        last_logits, cache = prefill_step(cfg, params, batch, max_seq,
+                                          cache_dtype)
 
-    first = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
-    (_, _), toks = jax.lax.scan(body, (first, cache), jnp.arange(n_steps))
-    return jnp.concatenate([first, toks.T[:, :n_steps - 1]], axis=1) \
-        if n_steps > 1 else first
+        def body(carry, i):
+            tok, cache = carry
+            logits, cache = decode_step(cfg, params, cache, tok,
+                                        S + vt + i)
+            nxt = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+            return (nxt, cache), nxt[:, 0]
+
+        first = jnp.argmax(last_logits, -1).astype(jnp.int32)[:, None]
+        (_, _), toks = jax.lax.scan(body, (first, cache),
+                                    jnp.arange(n_steps))
+        return jnp.concatenate([first, toks.T[:, :n_steps - 1]], axis=1) \
+            if n_steps > 1 else first
+
+    if engine is None:
+        return generate()
+    with engine.activate():
+        return generate()

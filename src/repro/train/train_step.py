@@ -7,6 +7,12 @@ Microbatching runs as a ``lax.scan`` over the leading microbatch axis, so
 activation memory is one microbatch deep while gradients accumulate in
 fp32 — combined with remat='block' this is what holds llama3-405b's
 train_4k footprint (see EXPERIMENTS.md §Dry-run).
+
+The step executes under an explicit :class:`repro.core.engine.Engine`
+carrying a compiled train-phase
+:class:`repro.core.schedule.LayerSchedule` (the paper's offline per-layer
+schedule): every named matmul in the loss resolves its array + dataflow
+case by memoized lookup instead of re-planning at trace time.
 """
 from __future__ import annotations
 
@@ -17,6 +23,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.engine import Engine
+from repro.core.schedule import LayerSchedule
 from repro.models import transformer as T
 from repro.optim import adamw, grad_compress
 
@@ -35,9 +43,11 @@ def make_loss(cfg: ModelConfig, tc: TrainConfig) -> Callable:
     return loss
 
 
-def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
+def make_train_step(cfg: ModelConfig, tc: TrainConfig, *,
+                    engine: Optional[Engine] = None) -> Callable:
     loss = make_loss(cfg, tc)
     grad_fn = jax.value_and_grad(loss, has_aux=True)
+    eng = engine if engine is not None else Engine()
 
     def grads_of(params, batch):
         if tc.microbatch and tc.microbatch < batch["tokens"].shape[0]:
@@ -61,7 +71,14 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
         return l, g
 
     def train_step(params, opt_state, cstate, batch):
-        l, grads = grads_of(params, batch)
+        # compile (memoized) the offline schedule at the per-pass shape:
+        # the microbatch when accumulating, the full batch otherwise
+        b, s = batch["tokens"].shape
+        mb = tc.microbatch if tc.microbatch and tc.microbatch < b else b
+        sched = LayerSchedule.compile(cfg, "train", batch=mb, seq=s,
+                                      policy=eng.policy, params=params)
+        with eng.with_schedule(sched).activate():
+            l, grads = grads_of(params, batch)
         grads, cstate = grad_compress.compress_grads(grads, cstate,
                                                      tc.grad_compress)
         params, opt_state, om = adamw.apply(params, grads, opt_state, tc)

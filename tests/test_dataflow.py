@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.accelerator import TPU_V5E
