@@ -45,6 +45,48 @@ def matmul_planner() -> List[Row]:
     return rows
 
 
+def conv_planner() -> List[Row]:
+    """The conv-aware planner on the paper's own layers: analytic HBM
+    traffic of the implicit-GEMM schedule vs. the compulsory minimum vs.
+    the kernel-area blowup the materialized-im2col path moved."""
+    from repro.core.perf_model import pallas_conv_traffic
+    rows = []
+    for net in ("alexnet", "vgg16"):
+        t0 = time.perf_counter()
+        layers = pallas_conv_traffic(net, batch=1)
+        us = (time.perf_counter() - t0) * 1e6
+        for row in layers[:2]:
+            p = row.plan
+            rows.append((
+                f"conv_planner/{net}/{row.layer}", us / len(layers),
+                f"case{p.case}/{p.regime} bi={p.bi} bj={p.bj} "
+                f"traffic={p.hbm_bytes/2**20:.1f}MiB "
+                f"(min {row.compulsory_bytes/2**20:.1f}MiB "
+                f"x{p.hbm_bytes/row.compulsory_bytes:.2f}; im2col moved "
+                f"{row.im2col_bytes/2**20:.1f}MiB "
+                f"x{row.im2col_bytes/p.hbm_bytes:.1f})"))
+    return rows
+
+
+def conv_kernels() -> List[Row]:
+    """Implicit-GEMM SA-CONV vs. the deleted materialized-im2col path on an
+    AlexNet conv2-shaped layer (27x27x96 -> 256, 5x5, pad 2)."""
+    from repro.kernels.conv2d import conv2d_im2col, conv2d_mpna
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 31, 31, 96),
+                          jnp.float32)
+    f = jax.random.normal(jax.random.PRNGKey(1), (5, 5, 96, 256),
+                          jnp.float32) * 0.05
+    b = jnp.zeros((256,), jnp.float32)
+    return [
+        ("kernel/conv_implicit_gemm_interp",
+         _time(lambda: conv2d_mpna(x, f, b, act="relu"), reps=3),
+         "pallas interpret, patches on-chip"),
+        ("kernel/conv_im2col_interp",
+         _time(lambda: conv2d_im2col(x, f, b, act="relu"), reps=3),
+         "legacy: patch matrix in HBM"),
+    ]
+
+
 def kernels_interpret() -> List[Row]:
     from repro.kernels import ref
     from repro.kernels.sa_conv import sa_conv_matmul
@@ -154,4 +196,5 @@ def dispatch_census() -> List[Row]:
     return rows
 
 
-ALL = [matmul_planner, kernels_interpret, engine_dispatch, dispatch_census]
+ALL = [matmul_planner, conv_planner, conv_kernels, kernels_interpret,
+       engine_dispatch, dispatch_census]

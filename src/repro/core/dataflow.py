@@ -37,6 +37,13 @@ from repro.core.accelerator import TPU_V5E, TPUChip
 LANE = 128
 SUBLANE = 16
 
+#: Largest block edge the Pallas kernels execute.  The planner caps every
+#: candidate tile here so the plan's (bm, bn, bk) — and therefore its
+#: hbm_bytes / vmem_bytes accounting — are exactly what the kernel runs
+#: (previously the kernels silently clamped to 512 and the executed tiling
+#: could diverge from the planned one).
+MAX_TILE = 512
+
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
@@ -72,7 +79,8 @@ class MatmulPlan:
 def classify_regime(m: int, n: int, k: int,
                     bytes_per_elem: int = 2,
                     chip: TPUChip = TPU_V5E, *,
-                    bytes_w: int | None = None) -> str:
+                    bytes_w: int | None = None,
+                    bytes_out: int = 4) -> str:
     """Heterogeneous-array dispatch (the SA-CONV vs SA-FC decision).
 
     Compulsory arithmetic intensity of the op = FLOPs / minimal bytes moved.
@@ -85,11 +93,16 @@ def classify_regime(m: int, n: int, k: int,
     paper's 8-bit fixed point / int8 :class:`~repro.core.quant.QTensor`):
     narrower weights shrink the dominant k*n byte term and can lift a
     decode-sized op across the ridge.
+
+    ``bytes_out`` is the per-element width of the output (the fp32 psum
+    spill the kernels write) — the same constant :func:`plan_matmul` and
+    :func:`compulsory_bytes` charge, so a near-ridge op classifies to the
+    same array whose plan/roofline it is then costed with.
     """
     if bytes_w is None:
         bytes_w = bytes_per_elem
     flops = 2 * m * n * k
-    min_bytes = (m * k + m * n) * bytes_per_elem + k * n * bytes_w
+    min_bytes = m * k * bytes_per_elem + k * n * bytes_w + m * n * bytes_out
     intensity = flops / min_bytes
     return "sa_conv" if intensity >= chip.ridge_flops_per_byte else "sa_fc"
 
@@ -121,7 +134,8 @@ def plan_matmul(m: int, n: int, k: int, *,
     budget = vmem_budget if vmem_budget is not None else chip.vmem_budget
     bw = bytes_w if bytes_w is not None else bytes_in
     if regime is None:
-        regime = classify_regime(m, n, k, bytes_in, chip, bytes_w=bw)
+        regime = classify_regime(m, n, k, bytes_in, chip, bytes_w=bw,
+                                 bytes_out=bytes_out)
 
     mp = _round_up(m, SUBLANE)
     np_ = _round_up(n, LANE)
@@ -168,16 +182,18 @@ def plan_matmul(m: int, n: int, k: int, *,
             bn *= 2
         candidates.append((3, bm, bn, bk))
 
-    # Case 4: exhaustive-ish search over aligned tilings
+    # Case 4: exhaustive-ish search over aligned tilings.  The search space
+    # is capped at MAX_TILE natively so every candidate is costed at the
+    # tiling the kernel will actually run.
     best4 = None
     for bm4 in (SUBLANE * (2 ** i) for i in range(0, 12)):
-        if bm4 > 2 * mp:
+        if bm4 > 2 * mp or bm4 > MAX_TILE:
             break
         for bn4 in (LANE * (2 ** i) for i in range(0, 9)):
-            if bn4 > 2 * np_:
+            if bn4 > 2 * np_ or bn4 > MAX_TILE:
                 break
             for bk4 in (LANE * (2 ** i) for i in range(0, 9)):
-                if bk4 > 2 * kp:
+                if bk4 > 2 * kp or bk4 > MAX_TILE:
                     break
                 if vmem(bm4, bn4, bk4) > budget:
                     continue
@@ -186,6 +202,19 @@ def plan_matmul(m: int, n: int, k: int, *,
                     best4 = (t, min(bm4, mp), min(bn4, np_), min(bk4, kp))
     assert best4 is not None, "VMEM budget too small for minimum tile"
     candidates.append((4, best4[1], best4[2], best4[3]))
+
+    # Cap every candidate at the kernels' maximum block edge so the plan's
+    # tiles ARE the executed tiles (no silent clamp drift downstream); the
+    # traffic/vmem accounting below therefore describes the real schedule.
+    # A candidate whose tiles the cap actually changed no longer has its
+    # scenario's residency structure — relabel it fully tiled (Case 4).
+    def _cap(c, bm_, bn_, bk_):
+        capped = (min(bm_, MAX_TILE), min(bn_, MAX_TILE), min(bk_, MAX_TILE))
+        return (c if capped == (bm_, bn_, bk_) else 4,) + capped
+
+    # capping only shrinks tiles, so every already-feasible candidate
+    # stays within the budget
+    candidates = [_cap(*c) for c in candidates]
 
     case, bm, bn, bk = min(
         candidates, key=lambda c: (traffic(c[1], c[2], c[3]), c[0]))
@@ -200,3 +229,245 @@ def compulsory_bytes(m: int, n: int, k: int,
     """Lower bound: every operand touched exactly once."""
     bw = bytes_w if bytes_w is not None else bytes_in
     return m * k * bytes_in + k * n * bw + m * n * bytes_out
+
+
+# ---------------------------------------------------------------------------
+# CONV planning — the implicit-GEMM SA-CONV schedule (paper Fig. 5 loop nest)
+# ---------------------------------------------------------------------------
+#: Patch-tile element cap for the kernel's fused-tap mode: up to this many
+#: elements the P*Q patch views are assembled into one on-chip tile for a
+#:  single MXU pass; above it (or when the tile would blow the VMEM
+#: budget) the taps stream through the accumulator one dot at a time.
+#: The decision is made HERE, by the planner, and carried in
+#: :attr:`ConvPlan.fuse_taps` — the kernel obeys the plan.
+TAP_FUSE_ELEMS = 1 << 22
+
+
+@dataclass(frozen=True)
+class ConvPlan:
+    """Tiling decision + analytic HBM traffic for one NHWC convolution run
+    on the implicit-GEMM SA-CONV kernel.
+
+    The kernel's grid is ``(batch, co/bj, ci/bi)`` with the input-channel
+    dimension innermost ("arbitrary", psum carried in VMEM): each step holds
+    one whole ``(h, w, bi)`` input slab on-chip and extracts the P*Q patch
+    views *inside* the kernel (the paper's input-buffer address generator),
+    so input activations cross HBM once per output-channel tile pass —
+    never once per patch element as the materialized-im2col path did.
+
+    ``fuse_taps`` is the kernel's execution mode for the patch views (one
+    fused MXU pass over an on-chip patch tile vs. tap-wise streaming);
+    the planner chooses it so ``vmem_bytes`` covers what actually gets
+    materialized.  ``m``/``n``/``k`` record the GEMM view of the
+    contraction (``batch*oh*ow`` x ``p*q*ci`` @ ``p*q*ci`` x ``co``) —
+    what the systolic array actually contracts and what the dispatch trace
+    reports.
+    """
+    case: int                       # 1..4 (buffer-fit scenario analog)
+    regime: str                     # 'sa_conv' | 'sa_fc' (policy-forced)
+    bi: int                         # input-channel tile
+    bj: int                         # output-channel tile
+    fuse_taps: bool                 # one fused patch-tile MXU pass?
+    hbm_bytes: int                  # analytic HBM bytes under this tiling
+    flops: int
+    vmem_bytes: int                 # working set (incl. double buffers)
+    m: int
+    n: int
+    k: int
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.hbm_bytes)
+
+    def grid(self, batch: int, ci: int, co: int) -> Tuple[int, int, int]:
+        return (batch, math.ceil(co / self.bj), math.ceil(ci / self.bi))
+
+
+def classify_conv_regime(batch: int, h: int, w: int, ci: int,
+                         p: int, q: int, co: int, *,
+                         stride: int = 1,
+                         bytes_in: int = 2, bytes_out: int = 4,
+                         bytes_w: int | None = None,
+                         chip: TPUChip = TPU_V5E) -> str:
+    """SA-CONV vs SA-FC for a convolution, costed at *real NHWC bytes*.
+
+    Feeding the GEMM view to :func:`classify_regime` would count the
+    ``m*k = batch*oh*ow*p*q*ci`` patch-matrix bytes — the im2col blowup
+    the implicit kernel never moves — and misclassify compute-bound convs
+    as bandwidth-bound.  Compulsory intensity here uses
+    :func:`compulsory_conv_bytes` (each NHWC/HWIO byte once), consistent
+    with the :class:`ConvPlan` traffic the op is then planned with.
+    """
+    oh = (h - p) // stride + 1
+    ow = (w - q) // stride + 1
+    flops = 2 * batch * oh * ow * co * p * q * ci
+    min_bytes = compulsory_conv_bytes(batch, h, w, ci, p, q, co,
+                                      stride=stride, bytes_in=bytes_in,
+                                      bytes_out=bytes_out, bytes_w=bytes_w)
+    return "sa_conv" if flops / min_bytes >= chip.ridge_flops_per_byte \
+        else "sa_fc"
+
+
+def _channel_tiles(c: int) -> list[int]:
+    """Aligned candidate channel tiles <= MAX_TILE, plus the exact channel
+    count (padding-free — e.g. the 3-channel RGB stem)."""
+    out = {min(c, MAX_TILE)}
+    t = SUBLANE
+    while t < c and t < MAX_TILE:
+        out.add(t)
+        t *= 2
+    return sorted(out)
+
+
+def plan_conv(batch: int, h: int, w: int, ci: int,
+              p: int, q: int, co: int, *,
+              stride: int = 1,
+              bytes_in: int = 2,
+              bytes_out: int = 4,
+              bytes_w: int | None = None,
+              vmem_budget: int | None = None,
+              chip: TPUChip = TPU_V5E,
+              regime: str | None = None) -> ConvPlan:
+    """Pick channel tiles + loop order for an NHWC x HWIO VALID conv.
+
+    ``h``/``w`` are the *padded* input spatial dims (the caller applies
+    explicit zero padding).  Traffic model for grid (batch, gj, gi) =
+    (batch, co/bj, ci/bi), gi innermost:
+
+        x bytes = batch*h*w*ci*bytes_in * gj   (slab re-read per CO tile)
+        w bytes = p*q*ci*co*bytes_w * batch    (filter re-fetched per sample
+                                                unless the whole filter is a
+                                                single resident tile)
+        o bytes = batch*oh*ow*co*bytes_out     (written once; fp32 psum
+                                                stays in VMEM)
+
+    This counts *real NHWC bytes* — the materialized-im2col path the kernel
+    replaces moved ``batch*oh*ow*p*q*ci`` input-patch bytes (a kernel-area
+    blowup) that no planner ever saw.
+    """
+    budget = vmem_budget if vmem_budget is not None else chip.vmem_budget
+    bw = bytes_w if bytes_w is not None else bytes_in
+    oh = (h - p) // stride + 1
+    ow = (w - q) // stride + 1
+    assert oh >= 1 and ow >= 1, (h, w, p, q, stride)
+    m, n, k = batch * oh * ow, co, p * q * ci
+    flops = 2 * m * n * k
+    if regime is None:
+        regime = classify_conv_regime(batch, h, w, ci, p, q, co,
+                                      stride=stride, bytes_in=bytes_in,
+                                      bytes_out=bytes_out, bytes_w=bw,
+                                      chip=chip)
+
+    def vmem(bi: int, bj: int, fused: bool) -> int:
+        base = (2 * h * w * bi * bytes_in        # input slab, double-buffered
+                + 2 * p * q * bi * bj * bw       # 'parallel weight movement'
+                + oh * ow * bj * 4               # fp32 accumulator SPM
+                + oh * ow * bj * bytes_out)      # output tile
+        if fused:
+            # the on-chip (oh*ow, p*q*bi) patch tile the fused MXU pass
+            # assembles (it never exists in HBM, but it IS working set)
+            base += oh * ow * p * q * bi * bytes_in
+        else:
+            # tap-wise streaming: one live (oh*ow, bi) view plus the
+            # local fp32 accumulator temp the loop carries
+            base += oh * ow * (bi * bytes_in + bj * 4)
+        return base
+
+    def fuse(bi: int, bj: int) -> bool:
+        return (oh * ow * p * q * bi <= TAP_FUSE_ELEMS
+                and vmem(bi, bj, True) <= budget)
+
+    def grids(bi: int, bj: int) -> Tuple[int, int]:
+        return math.ceil(ci / bi), math.ceil(co / bj)
+
+    def traffic(bi: int, bj: int) -> int:
+        gi, gj = grids(bi, bj)
+        cip, cop = gi * bi, gj * bj
+        # Pallas only re-DMAs a block when its index-map output changes:
+        # with a single CI tile the slab index is constant across the CO
+        # loop (one fetch per sample); likewise the filter re-streams per
+        # sample only when the (j, k) sweep actually revisits tiles.
+        x_passes = gj if gi > 1 else 1
+        w_passes = batch if gi * gj > 1 else 1
+        total = (batch * h * w * cip * bytes_in * x_passes
+                 + p * q * cip * cop * bw * w_passes
+                 + batch * oh * ow * cop * bytes_out)
+        # Tiles that don't divide the channel counts force materialized
+        # zero-padded copies (and an output slice-back) around the kernel
+        # — real HBM bytes, charged so plan == execution and the search
+        # prefers dividing tiles.
+        if cip != ci:
+            total += batch * h * w * (ci + cip) * bytes_in
+        if cip != ci or cop != co:
+            total += p * q * (ci * co + cip * cop) * bw
+        if cop != co:
+            total += batch * oh * ow * (cop + co) * bytes_out
+        return total
+
+    def case(bi: int, bj: int) -> int:
+        gi, gj = grids(bi, bj)
+        if gi == 1 and gj == 1:
+            return 1                 # everything resident, each byte once
+        if gi == 1:
+            return 2                 # input channels resident, CO partitioned
+        if gj == 1:
+            return 3                 # CO resident, contraction partitioned
+        return 4                     # fully tiled
+
+    best = None
+    for bi in _channel_tiles(ci):
+        for bj in _channel_tiles(co):
+            fused = fuse(bi, bj)
+            if vmem(bi, bj, fused) > budget:
+                continue
+            key = (traffic(bi, bj), case(bi, bj), not fused, -(bi * bj))
+            if best is None or key < best[0]:
+                best = (key, bi, bj, fused)
+    if best is not None:
+        _, bi, bj, fused = best
+        final_case = case(bi, bj)
+    else:
+        # Even the minimum (h, w, bi) slab exceeds the budget (no spatial
+        # tiling yet — a huge-resolution input).  Plan the smallest
+        # working set rather than fail: the plan is over budget and says
+        # so honestly in vmem_bytes (on CPU interpret this still runs;
+        # a TPU lowering would need the future spatially-tiled schedule).
+        bi = _channel_tiles(ci)[0]
+        bj = _channel_tiles(co)[0]
+        fused = False
+        final_case = 4
+    return ConvPlan(final_case, regime, bi, bj, fuse_taps=fused,
+                    hbm_bytes=traffic(bi, bj), flops=flops,
+                    vmem_bytes=vmem(bi, bj, fused), m=m, n=n, k=k)
+
+
+def compulsory_conv_bytes(batch: int, h: int, w: int, ci: int,
+                          p: int, q: int, co: int, *,
+                          stride: int = 1,
+                          bytes_in: int = 2, bytes_out: int = 4,
+                          bytes_w: int | None = None) -> int:
+    """Lower bound for the conv: every NHWC/HWIO byte touched exactly once
+    (what the paper's Fig. 5/7 reuse maximization drives toward)."""
+    bw = bytes_w if bytes_w is not None else bytes_in
+    oh = (h - p) // stride + 1
+    ow = (w - q) // stride + 1
+    return (batch * h * w * ci * bytes_in + p * q * ci * co * bw
+            + batch * oh * ow * co * bytes_out)
+
+
+def im2col_bytes(batch: int, h: int, w: int, ci: int,
+                 p: int, q: int, co: int, *,
+                 stride: int = 1,
+                 bytes_in: int = 2, bytes_out: int = 4,
+                 bytes_w: int | None = None) -> int:
+    """HBM bytes the *materialized* im2col path moved: the patch matrix
+    ``(batch*oh*ow, p*q*ci)`` is written once and re-read by the GEMM —
+    the kernel-area-times input blowup the implicit-GEMM kernel deletes."""
+    bw = bytes_w if bytes_w is not None else bytes_in
+    oh = (h - p) // stride + 1
+    ow = (w - q) // stride + 1
+    patch = batch * oh * ow * p * q * ci * bytes_in
+    return (batch * h * w * ci * bytes_in        # read input
+            + 2 * patch                          # write + re-read patches
+            + p * q * ci * co * bw
+            + batch * oh * ow * co * bytes_out)

@@ -50,9 +50,10 @@ import jax.numpy as jnp
 
 from repro.core import dataflow
 from repro.core.accelerator import TPU_V5E, TPUChip
-from repro.core.dataflow import MatmulPlan
+from repro.core.dataflow import ConvPlan, MatmulPlan
 from repro.kernels import ref
 from repro.kernels.sa_conv import sa_conv_matmul
+from repro.kernels.sa_conv_implicit import sa_conv_implicit
 from repro.kernels.sa_fc import sa_fc_matmul
 
 
@@ -74,6 +75,10 @@ class DispatchRecord:
     weight_dtype: str = ""      # 'int8' for QTensor weights
     schedule: str = ""          # 'hit' | 'miss' | '' (no schedule attached)
     plan: Optional[MatmulPlan] = None
+    # CONV dispatches: the conv plan plus the layer geometry
+    # (batch, h, w, ci, p, q, co, stride) — h/w are the padded input dims.
+    conv_plan: Optional[ConvPlan] = None
+    conv_shape: Optional[Tuple[int, ...]] = None
 
     def __getitem__(self, key: str) -> Any:
         return getattr(self, key)
@@ -164,6 +169,35 @@ class DispatchPolicy:
                             weight_bytes if weight_bytes is not None
                             else act_bytes, regime)
 
+    def conv_regime_for(self, name: str, batch: int, h: int, w: int,
+                        ci: int, p: int, q: int, co: int, stride: int, *,
+                        act_bytes: int,
+                        weight_bytes: Optional[int] = None) -> str:
+        """Conv twin of :meth:`regime_for`: same override/force precedence,
+        but the intensity fallback costs *real NHWC bytes* (not the
+        patch-matrix GEMM view, which would tag compute-bound convs as
+        bandwidth-bound)."""
+        for pat, reg in self.overrides:
+            if name == pat:
+                return reg
+        if self.force_regime is not None:
+            return self.force_regime
+        return dataflow.classify_conv_regime(
+            batch, h, w, ci, p, q, co, stride=stride, bytes_in=act_bytes,
+            bytes_w=weight_bytes, chip=self.chip)
+
+    def plan_conv(self, batch: int, h: int, w: int, ci: int,
+                  p: int, q: int, co: int, stride: int, *, act_bytes: int,
+                  weight_bytes: Optional[int] = None,
+                  regime: Optional[str] = None) -> ConvPlan:
+        """Conv-aware planning under this policy's chip/VMEM budget —
+        the CONV twin of :meth:`plan` (traffic counted in real NHWC bytes,
+        not patch-matrix bytes)."""
+        return _cached_conv_plan(self, batch, h, w, ci, p, q, co, stride,
+                                 act_bytes,
+                                 weight_bytes if weight_bytes is not None
+                                 else act_bytes, regime)
+
 
 @functools.lru_cache(maxsize=4096)
 def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
@@ -172,6 +206,17 @@ def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
     return dataflow.plan_matmul(
         m, n, k, bytes_in=act_bytes, bytes_w=weight_bytes,
         vmem_budget=policy.vmem_budget, chip=policy.chip, regime=regime)
+
+
+@functools.lru_cache(maxsize=4096)
+def _cached_conv_plan(policy: DispatchPolicy, batch: int, h: int, w: int,
+                      ci: int, p: int, q: int, co: int, stride: int,
+                      act_bytes: int, weight_bytes: int,
+                      regime: Optional[str]) -> ConvPlan:
+    return dataflow.plan_conv(
+        batch, h, w, ci, p, q, co, stride=stride, bytes_in=act_bytes,
+        bytes_w=weight_bytes, vmem_budget=policy.vmem_budget,
+        chip=policy.chip, regime=regime)
 
 
 # ---------------------------------------------------------------------------
@@ -185,7 +230,9 @@ def _pallas_matmul(x2d, w, bias, act, regime, interpret, *,
     if regime == "sa_fc":
         bn = bk = 512
         if plan is not None:
-            bn, bk = min(plan.bn, 512), min(plan.bk, 512)
+            # planner tiles are pre-capped at dataflow.MAX_TILE: executed
+            # block shapes equal the plan's (no silent clamp drift)
+            bn, bk = plan.bn, plan.bk
         return sa_fc_matmul(x2d, w, bias, act=act, bn=bn, bk=bk,
                             w_scale=w_scale, out_dtype=out_dtype,
                             interpret=interpret)
@@ -414,6 +461,31 @@ class Engine:
                                 weight_bytes=w_bytes, regime=regime)
         return plan, state
 
+    def plan_conv_for(self, name: str, batch: int, h: int, w: int, ci: int,
+                      p: int, q: int, co: int, stride: int, *,
+                      dtype, weight_dtype) -> Tuple[ConvPlan, str]:
+        """(conv plan, 'hit'|'miss'|'') for one named CONV op — schedule
+        lookup with policy fallback.  ``h``/``w`` are the padded input
+        spatial dims."""
+        act_bytes = jnp.dtype(dtype).itemsize
+        w_bytes = jnp.dtype(weight_dtype).itemsize
+        state = ""
+        if self.schedule is not None:
+            plan = self.schedule.lookup_conv(
+                name, batch, h, w, ci, p, q, co, stride,
+                str(jnp.dtype(dtype)), str(jnp.dtype(weight_dtype)))
+            if plan is not None:
+                return plan, "hit"
+            state = "miss"
+        regime = self.policy.conv_regime_for(name, batch, h, w, ci, p, q,
+                                             co, stride,
+                                             act_bytes=act_bytes,
+                                             weight_bytes=w_bytes)
+        plan = self.policy.plan_conv(batch, h, w, ci, p, q, co, stride,
+                                     act_bytes=act_bytes,
+                                     weight_bytes=w_bytes, regime=regime)
+        return plan, state
+
     # -- ops ----------------------------------------------------------------
     def matmul(self, x: jax.Array, w, bias: Optional[jax.Array] = None, *,
                act: str = "none", name: str = "matmul",
@@ -464,6 +536,54 @@ class Engine:
         # dtype was applied exactly once (kernel epilogue / oracle); the
         # reshape below must not re-cast.
         return out.reshape(*lead, n)
+
+    def conv2d(self, x: jax.Array, f, bias: Optional[jax.Array] = None, *,
+               stride: int = 1, pad: int = 0, act: str = "none",
+               name: str = "conv", out_dtype=None) -> jax.Array:
+        """NHWC x HWIO convolution with fused bias+activation epilogue,
+        planned by the engine's policy/schedule and executed on the
+        implicit-GEMM SA-CONV kernel (``backend="pallas"``) or the XLA
+        oracle.  No im2col patch matrix is ever materialized in HBM.
+
+        ``f`` may be a :class:`repro.core.quant.QTensor` (int8 + per-output-
+        channel scales): the int8 filter reaches the kernel un-dequantized
+        and the scale fuses into the accumulator-flush epilogue.
+
+        ``plan.regime`` names the *array* the schedule assigns the layer
+        to — the paper runs CONV on both arrays (SA-FC is CONV-capable,
+        Sec. IV-B) — so a forced/overridden regime changes the planning
+        and the trace accounting, not the kernel: the implicit-GEMM
+        kernel is the single CONV implementation for either assignment."""
+        from repro.core.quant import QTensor
+        if isinstance(f, QTensor):
+            fq, f_scale = f.q, f.scale.reshape(-1)
+        else:
+            fq, f_scale = f, None
+        if pad:
+            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        batch, h, w, ci = x.shape
+        p, q, ci2, co = fq.shape
+        assert ci == ci2, (x.shape, fq.shape)
+        plan, sched = self.plan_conv_for(name, batch, h, w, ci, p, q, co,
+                                         stride, dtype=x.dtype,
+                                         weight_dtype=fq.dtype)
+        self._record(name=name, regime=plan.regime, m=plan.m, n=plan.n,
+                     k=plan.k, case=plan.case, backend=self.backend,
+                     dtype=str(x.dtype), weight_dtype=str(fq.dtype),
+                     schedule=sched, conv_plan=plan,
+                     conv_shape=(batch, h, w, ci, p, q, co, stride))
+        out_dt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
+        if self.backend == "pallas":
+            return sa_conv_implicit(x, fq, bias, stride=stride, act=act,
+                                    plan=plan, w_scale=f_scale,
+                                    out_dtype=out_dt,
+                                    interpret=self.interpret)
+        ff = fq if f_scale is None else \
+            (fq.astype(jnp.float32) * f_scale.reshape(1, 1, 1, co))
+        out = ref.conv2d(x, ff, stride=stride, out_dtype=jnp.float32)
+        if bias is not None:
+            out = out + bias.astype(jnp.float32)
+        return ref.apply_act(out, act).astype(out_dt)
 
     def attention(self, q, k, v, *, causal=True, window=0, softcap=0.0,
                   scale=None, name="attn"):
@@ -519,6 +639,14 @@ def matmul(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
     """Deprecated shim: ``current().matmul(...)``."""
     return current().matmul(x, w, bias, act=act, name=name,
                             out_dtype=out_dtype)
+
+
+def conv2d(x: jax.Array, f, bias: Optional[jax.Array] = None, *,
+           stride: int = 1, pad: int = 0, act: str = "none",
+           name: str = "conv", out_dtype=None) -> jax.Array:
+    """Deprecated shim: ``current().conv2d(...)``."""
+    return current().conv2d(x, f, bias, stride=stride, pad=pad, act=act,
+                            name=name, out_dtype=out_dtype)
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0,

@@ -44,7 +44,9 @@ from dataclasses import dataclass
 from typing import Iterable, List, Optional
 
 from repro.core.accelerator import ENERGY_PJ, MPNA_PAPER, MPNAConfig, \
-    SystolicArray
+    SystolicArray, TPU_V5E, TPUChip
+from repro.core.dataflow import (ConvPlan, compulsory_conv_bytes,
+                                 im2col_bytes, plan_conv)
 from repro.models.cnn import LayerStats, network_stats
 
 
@@ -287,6 +289,55 @@ def fig12c_access_reduction(net: str = "alexnet", *,
     m = mpna_traffic(net, conv_only=conv_only).dram_bytes
     b = baseline_traffic(net, conv_only=conv_only).dram_bytes
     return 1.0 - m / b
+
+
+# ---------------------------------------------------------------------------
+# TPU-side CONV traffic: what the implicit-GEMM SA-CONV kernel's schedule
+# commits to, layer by layer (the framework twin of mpna_traffic above —
+# same per-layer plans repro.core.schedule.LayerSchedule.compile_cnn emits,
+# asserted in tests/test_conv_dispatch.py).
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ConvLayerTraffic:
+    layer: str
+    plan: ConvPlan
+    compulsory_bytes: int          # every NHWC/HWIO byte exactly once
+    im2col_bytes: int              # what the materialized-patch path moved
+
+
+def pallas_conv_traffic(net: str, *, batch: int = 1,
+                        in_res: Optional[int] = None, in_ch: int = 3,
+                        bytes_in: int = 4, bytes_w: Optional[int] = None,
+                        bytes_out: int = 4,
+                        chip: TPUChip = TPU_V5E,
+                        vmem_budget: Optional[int] = None
+                        ) -> List[ConvLayerTraffic]:
+    """Per-CONV-layer analytic HBM traffic of the implicit-GEMM path:
+    planner bytes vs. the compulsory minimum vs. the im2col blowup the
+    kernel deleted.  Layer geometry comes from
+    :func:`repro.models.cnn.network_stats` (single source of truth for
+    the shape propagation); only the explicit padding is read off the
+    layer spec."""
+    from repro.models.cnn import NETWORKS, network_stats
+    spec, _ = NETWORKS[net]
+    convs = [l for l in network_stats(net, in_res=in_res, in_ch=in_ch)
+             if l.kind == "conv"]
+    conv_specs = [s for s in spec if s.kind == "conv"]
+    out: List[ConvLayerTraffic] = []
+    for l, s in zip(convs, conv_specs):
+        res, _, ch = l.ifm
+        hp = res + 2 * s.pad                        # padded input edge
+        kw = dict(stride=s.stride, bytes_in=bytes_in, bytes_w=bytes_w,
+                  bytes_out=bytes_out)
+        plan = plan_conv(batch, hp, hp, ch, s.kernel, s.kernel, s.out_ch,
+                         vmem_budget=vmem_budget, chip=chip, **kw)
+        out.append(ConvLayerTraffic(
+            l.name, plan,
+            compulsory_conv_bytes(batch, hp, hp, ch, s.kernel, s.kernel,
+                                  s.out_ch, **kw),
+            im2col_bytes(batch, hp, hp, ch, s.kernel, s.kernel, s.out_ch,
+                         **kw)))
+    return out
 
 
 # ---------------------------------------------------------------------------

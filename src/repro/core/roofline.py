@@ -461,11 +461,14 @@ def terms_from_schedule(schedule, chips: int = 1,
                         model_flops: float = 0.0) -> RooflineTerms:
     """Roofline terms from a compiled
     :class:`repro.core.schedule.LayerSchedule`: sums each scheduled op's
-    planner-analytic FLOPs and HBM traffic (the offline counterpart of the
-    HLO-derived terms above — what the schedule *commits to* before any
-    lowering; no collective term, single-chip analytic view)."""
-    flops = float(sum(p.flops for p in schedule.values()))
-    hbm = float(sum(p.hbm_bytes for p in schedule.values()))
+    planner-analytic FLOPs and HBM traffic — matmul AND conv entries (the
+    conv term counts the implicit-GEMM kernel's real NHWC bytes, not
+    patch-matrix bytes).  The offline counterpart of the HLO-derived terms
+    above — what the schedule *commits to* before any lowering; no
+    collective term, single-chip analytic view."""
+    plans = list(getattr(schedule, "plans", schedule.values)())
+    flops = float(sum(p.flops for p in plans))
+    hbm = float(sum(p.hbm_bytes for p in plans))
     return RooflineTerms(flops_per_chip=flops / chips,
                          hbm_bytes_per_chip=hbm / chips,
                          wire_bytes_per_chip=0.0, chips=chips,

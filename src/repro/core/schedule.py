@@ -30,7 +30,7 @@ from typing import Any, Dict, Iterator, Mapping, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dataflow import MatmulPlan
+from repro.core.dataflow import ConvPlan, MatmulPlan
 from repro.core.engine import DispatchPolicy, Engine
 
 PHASES = ("train", "prefill", "decode")
@@ -47,14 +47,43 @@ class OpKey:
     weight_dtype: str
 
 
+@dataclass(frozen=True)
+class ConvOpKey:
+    """Identity of one scheduled CONV op.  ``h``/``w`` are the *padded*
+    input spatial dims (what the kernel actually sees)."""
+    name: str
+    batch: int
+    h: int
+    w: int
+    ci: int
+    p: int
+    q: int
+    co: int
+    stride: int
+    dtype: str
+    weight_dtype: str
+
+
 class LayerSchedule(Mapping):
-    """Immutable compiled mapping ``OpKey -> MatmulPlan`` for one phase."""
+    """Immutable compiled mapping ``OpKey -> MatmulPlan`` (plus
+    ``ConvOpKey -> ConvPlan`` for CONV layers) for one phase.
+
+    The Mapping protocol covers the matmul entries (back-compat);
+    CONV entries are reached via :meth:`lookup_conv` /
+    :attr:`conv_entries` / :meth:`plans`."""
 
     def __init__(self, phase: str, policy: DispatchPolicy,
-                 entries: Dict[OpKey, MatmulPlan]) -> None:
+                 entries: Dict[OpKey, MatmulPlan],
+                 conv_entries: Optional[Dict[ConvOpKey, ConvPlan]] = None
+                 ) -> None:
         self.phase = phase
         self.policy = policy
         self._entries = MappingProxyType(dict(entries))
+        self._conv_entries = MappingProxyType(dict(conv_entries or {}))
+
+    @property
+    def conv_entries(self) -> Mapping:
+        return self._conv_entries
 
     # -- Mapping protocol ---------------------------------------------------
     def __getitem__(self, key: OpKey) -> MatmulPlan:
@@ -70,11 +99,14 @@ class LayerSchedule(Mapping):
         return (isinstance(other, LayerSchedule)
                 and self.phase == other.phase
                 and self.policy == other.policy
-                and dict(self._entries) == dict(other._entries))
+                and dict(self._entries) == dict(other._entries)
+                and dict(self._conv_entries) == dict(other._conv_entries))
 
     def __hash__(self) -> int:
         return hash((self.phase, self.policy,
                      tuple(sorted(self._entries.items(),
+                                  key=lambda kv: repr(kv[0]))),
+                     tuple(sorted(self._conv_entries.items(),
                                   key=lambda kv: repr(kv[0])))))
 
     # -- lookup -------------------------------------------------------------
@@ -82,9 +114,30 @@ class LayerSchedule(Mapping):
                dtype: str, weight_dtype: str) -> Optional[MatmulPlan]:
         return self._entries.get(OpKey(name, m, n, k, dtype, weight_dtype))
 
+    def lookup_conv(self, name: str, batch: int, h: int, w: int, ci: int,
+                    p: int, q: int, co: int, stride: int,
+                    dtype: str, weight_dtype: str) -> Optional[ConvPlan]:
+        return self._conv_entries.get(
+            ConvOpKey(name, batch, h, w, ci, p, q, co, stride,
+                      dtype, weight_dtype))
+
+    def plans(self):
+        """Every plan in the schedule (matmul + conv) — what the offline
+        roofline sums."""
+        return list(self._entries.values()) + list(
+            self._conv_entries.values())
+
     def table(self) -> str:
         """The paper-style schedule table, one line per op."""
-        lines = [f"[{self.phase}] {len(self)} scheduled ops"]
+        lines = [f"[{self.phase}] {len(self) + len(self._conv_entries)} "
+                 f"scheduled ops"]
+        for ckey, cplan in self._conv_entries.items():
+            lines.append(
+                f"  {ckey.name:24s} conv {ckey.h}x{ckey.w}x{ckey.ci} "
+                f"*{ckey.p}x{ckey.q}->{ckey.co} s{ckey.stride} "
+                f"w={ckey.weight_dtype:8s} -> {cplan.regime:8s} "
+                f"case {cplan.case} tile (bi={cplan.bi},bj={cplan.bj}) "
+                f"hbm {cplan.hbm_bytes / 2**20:.1f} MiB")
         for key, plan in self._entries.items():
             lines.append(
                 f"  {key.name:24s} ({key.m}x{key.k})@({key.k}x{key.n}) "
@@ -94,7 +147,8 @@ class LayerSchedule(Mapping):
         return "\n".join(lines)
 
     def __repr__(self) -> str:
-        return f"LayerSchedule(phase={self.phase!r}, ops={len(self)})"
+        return (f"LayerSchedule(phase={self.phase!r}, ops={len(self)}, "
+                f"conv_ops={len(self._conv_entries)})")
 
     # -- compilation --------------------------------------------------------
     @classmethod
@@ -124,8 +178,38 @@ class LayerSchedule(Mapping):
         if hit is not None:
             return hit
         sched = cls(phase, policy,
-                    _collect(cfg, phase, batch, seq, max_seq, cache_dtype,
-                             policy, params))
+                    *_collect(cfg, phase, batch, seq, max_seq, cache_dtype,
+                              policy, params))
+        _CACHE[key] = sched
+        return sched
+
+    @classmethod
+    def compile_cnn(cls, net: str, *,
+                    batch: int = 1,
+                    in_res: Optional[int] = None,
+                    in_ch: int = 3,
+                    width_mult: float = 1.0,
+                    dtype=jnp.float32,
+                    policy: Optional[DispatchPolicy] = None,
+                    params: Optional[Any] = None) -> "LayerSchedule":
+        """Compile (and memoize) the inference schedule for a CNN from
+        :data:`repro.models.cnn.NETWORKS` — the paper's per-layer offline
+        schedule (Sec. V) for its own workloads: every CONV gets a
+        :class:`~repro.core.dataflow.ConvPlan` (implicit-GEMM tiling,
+        real NHWC traffic), every FC a
+        :class:`~repro.core.dataflow.MatmulPlan`.  An engine carrying the
+        result resolves each layer by lookup (``schedule="hit"``) instead
+        of re-planning at trace time."""
+        if policy is None:
+            policy = DispatchPolicy()
+        key = ("cnn", net, batch, in_res, in_ch, width_mult,
+               str(jnp.dtype(dtype)), policy, _params_fingerprint(params))
+        hit = _CACHE.get(key)
+        if hit is not None:
+            return hit
+        sched = cls("infer", policy,
+                    *_collect_cnn(net, batch, in_res, in_ch, width_mult,
+                                  dtype, policy, params))
         _CACHE[key] = sched
         return sched
 
@@ -146,9 +230,47 @@ def _params_fingerprint(params: Any) -> Optional[Tuple]:
             tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in flat))
 
 
+def _entries_from_trace(tr) -> Tuple[Dict[OpKey, MatmulPlan],
+                                     Dict[ConvOpKey, ConvPlan]]:
+    entries: Dict[OpKey, MatmulPlan] = {}
+    conv_entries: Dict[ConvOpKey, ConvPlan] = {}
+    for rec in tr:
+        if rec.conv_plan is not None and rec.conv_shape is not None:
+            conv_entries[ConvOpKey(rec.name, *rec.conv_shape, rec.dtype,
+                                   rec.weight_dtype)] = rec.conv_plan
+        elif rec.plan is not None and rec.regime in ("sa_conv", "sa_fc"):
+            entries[OpKey(rec.name, rec.m, rec.n, rec.k, rec.dtype,
+                          rec.weight_dtype)] = rec.plan
+    return entries, conv_entries
+
+
+def _collect_cnn(net: str, batch: int, in_res: Optional[int], in_ch: int,
+                 width_mult: float, dtype, policy: DispatchPolicy, params
+                 ) -> Tuple[Dict[OpKey, MatmulPlan],
+                            Dict[ConvOpKey, ConvPlan]]:
+    """Abstract-trace one CNN forward under a collecting engine."""
+    from repro.models import cnn
+
+    _, res0 = cnn.NETWORKS[net]
+    res = in_res if in_res is not None else res0
+    if params is None:
+        params = jax.eval_shape(
+            lambda: cnn.init_cnn(net, jax.random.PRNGKey(0), in_res=res,
+                                 in_ch=in_ch, width_mult=width_mult,
+                                 dtype=dtype))
+    eng = Engine(backend="xla", policy=policy)
+    with eng.tracing() as tr, eng.activate():
+        x = jax.ShapeDtypeStruct((batch, res, res, in_ch), jnp.dtype(dtype))
+        jax.eval_shape(lambda pr, xv: cnn.cnn_forward(net, pr, xv, eng=eng),
+                       params, x)
+    return _entries_from_trace(tr)
+
+
 def _collect(cfg, phase: str, batch: int, seq: int,
              max_seq: Optional[int], cache_dtype,
-             policy: DispatchPolicy, params) -> Dict[OpKey, MatmulPlan]:
+             policy: DispatchPolicy, params
+             ) -> Tuple[Dict[OpKey, MatmulPlan],
+                        Dict[ConvOpKey, ConvPlan]]:
     """Abstract-trace the phase function under a collecting engine."""
     # lazy imports: models/serve import repro.core.engine at module load
     from repro.models import transformer as T
@@ -181,10 +303,4 @@ def _collect(cfg, phase: str, batch: int, seq: int,
                 lambda p, c, t, i: decode_step(cfg, p, c, t, i),
                 params, cache, tok, pos)
 
-    entries: Dict[OpKey, MatmulPlan] = {}
-    for rec in tr:
-        if rec.plan is None or rec.regime not in ("sa_conv", "sa_fc"):
-            continue
-        entries[OpKey(rec.name, rec.m, rec.n, rec.k, rec.dtype,
-                      rec.weight_dtype)] = rec.plan
-    return entries
+    return _entries_from_trace(tr)

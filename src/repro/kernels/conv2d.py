@@ -2,11 +2,22 @@
 
 MPNA executes convolution on the systolic array by mapping the
 (I x P x Q) contraction onto the K rows and the J output channels onto the
-L columns — i.e., convolution as GEMM.  We do the same: an im2col patch
-extraction (pure data movement, fused by XLA) followed by the
-:func:`repro.kernels.sa_conv.sa_conv_matmul` Pallas kernel, so the CONV and
-FC paths share the accumulation + fused-epilogue machinery exactly as the
-two arrays share the accumulation unit in Fig. 7.
+L columns — i.e., convolution as GEMM.  The production path is the
+*implicit-GEMM* kernel (:mod:`repro.kernels.sa_conv_implicit`): patch
+extraction happens inside the kernel via the grid index maps (the paper's
+input-buffer address generator), so no im2col patch matrix ever touches
+HBM.  Dispatch, planning and tracing live in
+:meth:`repro.core.engine.Engine.conv2d`.
+
+This module keeps two things:
+
+* :func:`conv2d_mpna` — a deprecation shim over the current engine's
+  ``conv2d`` so old call sites keep working (and now respect the ambient
+  engine's :class:`~repro.core.engine.DispatchPolicy`/trace/schedule,
+  which the old free function ignored).
+* :func:`conv2d_im2col` — the legacy materialized-im2col path, retained
+  ONLY as a reference point for benchmarks (`benchmarks/kernel_bench.py`
+  measures the traffic/wall-time gap it loses by).  Not used by any model.
 """
 from __future__ import annotations
 
@@ -19,21 +30,37 @@ import jax.numpy as jnp
 from repro.kernels.sa_conv import sa_conv_matmul
 
 
-@functools.partial(jax.jit, static_argnames=("stride", "act", "interpret"))
 def conv2d_mpna(x: jax.Array, f: jax.Array,
                 bias: Optional[jax.Array] = None, *,
                 stride: int = 1, act: str = "none",
                 interpret: bool = True) -> jax.Array:
-    """NHWC x HWIO VALID convolution on the SA-CONV dataflow.
+    """Deprecated shim: ``current().conv2d(...)`` on the pallas backend.
 
-    x: (N, H, W, I);  f: (P, Q, I, J)  ->  (N, M, Nw, J)
+    x: (N, H, W, I);  f: (P, Q, I, J)  ->  (N, OH, OW, J), VALID.
+    Runs the implicit-GEMM SA-CONV kernel under the ambient engine's
+    policy/trace/schedule.  Prefer :meth:`Engine.conv2d`.
+    """
+    from repro.core import engine
+    eng = engine.current().with_(backend="pallas", interpret=interpret)
+    return eng.conv2d(x, f, bias, stride=stride, act=act, name="conv2d_mpna")
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act", "interpret"))
+def conv2d_im2col(x: jax.Array, f: jax.Array,
+                  bias: Optional[jax.Array] = None, *,
+                  stride: int = 1, act: str = "none",
+                  interpret: bool = True) -> jax.Array:
+    """Legacy materialized-im2col CONV — benchmark reference only.
+
+    Materializes the (N*OH*OW, I*P*Q) patch matrix in HBM (a kernel-area-
+    times input blowup) before the GEMM; the implicit-GEMM kernel exists
+    to delete exactly this.
     """
     n, h, w, i = x.shape
     p, q, i2, j = f.shape
     assert i == i2
     oh, ow = (h - p) // stride + 1, (w - q) // stride + 1
 
-    # im2col: (N, OH, OW, I*P*Q) patches — the input-buffer address generator
     patches = jax.lax.conv_general_dilated_patches(
         x, (p, q), (stride, stride), "VALID",
         dimension_numbers=("NHWC", "HWIO", "NHWC"))

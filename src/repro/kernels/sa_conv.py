@@ -97,7 +97,9 @@ def sa_conv_matmul(x: jax.Array, w: jax.Array,
     if plan is None:
         plan = plan_matmul(m, n, k, bytes_in=x.dtype.itemsize,
                            bytes_w=w.dtype.itemsize)
-    bm, bn, bk = min(plan.bm, 512), min(plan.bn, 512), min(plan.bk, 512)
+    # The planner caps tiles at dataflow.MAX_TILE, so the executed tiling
+    # IS the planned tiling — plan.hbm_bytes/vmem_bytes describe this run.
+    bm, bn, bk = plan.bm, plan.bn, plan.bk
 
     gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
     xp = _pad_to(x, gm * bm, gk * bk)

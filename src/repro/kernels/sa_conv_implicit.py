@@ -1,0 +1,170 @@
+"""Implicit-GEMM SA-CONV — convolution on the systolic dataflow without a
+materialized im2col patch matrix.
+
+Paper mapping (Fig. 5 loop nest + Fig. 7B/C):
+
+* The paper's *input-buffer address generator* walks the (P, Q) patch
+  window over the on-chip activation slab; weights stay stationary in the
+  array.  Here the grid index maps land one whole ``(h, w, bi)`` NHWC input
+  slab in VMEM per step and the kernel body extracts the P*Q shifted
+  strided views itself (`jax.lax.slice` — static, fully vectorized), each
+  feeding one ``(oh*ow, bi) @ (bi, bj)`` MXU contraction.
+* Input activations therefore cross HBM once per output-channel tile pass
+  — never once per patch element.  The old path materialized the
+  ``(batch*oh*ow, p*q*ci)`` patch matrix in HBM (a kernel-area-times input
+  blowup the planner never saw); this kernel deletes it.
+* psum flows down the grid's innermost input-channel dimension into a fp32
+  VMEM accumulator (the accumulation-unit SPM of Fig. 7E), flushed through
+  the fused scale+bias+activation epilogue exactly once per output tile
+  (the paper's operator reordering).
+* int8 filters (the paper's 8-bit fixed point) ride the same epilogue: the
+  int8 tile widens on-chip and the per-output-channel dequant scale
+  multiplies the accumulator at flush — HBM moves 1 byte/weight.
+
+Grid order is (batch, co-tiles, ci-tiles) with the contraction innermost
+("arbitrary") so the accumulator never spills — the output-stationary
+schedule the paper uses for CONV.  Block shapes come from
+:func:`repro.core.dataflow.plan_conv`; the executed tiles ARE the planned
+tiles (no clamping between plan and execution).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dataflow import ConvPlan, plan_conv
+from repro.kernels import ref
+from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
+
+
+def _implicit_conv_kernel(x_ref, f_ref, *rest, stride: int, oh: int, ow: int,
+                          act: str, has_bias: bool, has_scale: bool,
+                          fuse_taps: bool):
+    rest = list(rest)
+    s_ref = rest.pop(0) if has_scale else None
+    b_ref = rest.pop(0) if has_bias else None
+    o_ref, acc_ref = rest
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                                   # (h, w, bi) VMEM slab
+    p, q, bi, bj = f_ref.shape
+
+    def view(dp, dq):
+        # The address generator: one shifted strided view of the resident
+        # slab — never a patch matrix in HBM.
+        sl = jax.lax.slice(
+            x, (dp, dq, 0),
+            (dp + (oh - 1) * stride + 1, dq + (ow - 1) * stride + 1, bi),
+            (stride, stride, 1))                   # (oh, ow, bi)
+        return sl.reshape(oh * ow, bi)
+
+    if fuse_taps:
+        # assemble one (oh*ow, p*q*bi) patch tile on-chip and contract it
+        # in a single MXU pass; f_ref flattens (p, q, bi) in the same
+        # dp-major, dq, bi order.  The planner charged this tile to the
+        # plan's vmem_bytes (ConvPlan.fuse_taps).
+        patch = jnp.concatenate(
+            [view(dp, dq) for dp in range(p) for dq in range(q)], axis=1)
+        w_tile = f_ref[...].reshape(p * q * bi, bj)
+        acc_ref[...] += jnp.dot(patch, w_tile.astype(patch.dtype),
+                                preferred_element_type=jnp.float32)
+    else:
+        # large spatial maps / tight budgets: stream tap-wise, one view
+        # live at a time (bounded working set — the literal per-PE
+        # dataflow)
+        acc = jnp.zeros_like(acc_ref)
+        for dp in range(p):
+            for dq in range(q):
+                v = view(dp, dq)
+                acc += jnp.dot(v, f_ref[dp, dq].astype(v.dtype),
+                               preferred_element_type=jnp.float32)
+        acc_ref[...] += acc
+
+    @pl.when(kk == pl.num_programs(2) - 1)
+    def _flush():
+        out = acc_ref[...]
+        if has_scale:
+            out = out * s_ref[...].astype(jnp.float32)
+        if has_bias:
+            out = out + b_ref[...].astype(jnp.float32)
+        o_ref[...] = ref.apply_act(out, act).reshape(
+            1, oh, ow, -1).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "act", "plan",
+                                             "out_dtype", "interpret"))
+def sa_conv_implicit(x: jax.Array, f: jax.Array,
+                     bias: Optional[jax.Array] = None, *,
+                     stride: int = 1, act: str = "none",
+                     plan: Optional[ConvPlan] = None,
+                     w_scale: Optional[jax.Array] = None,
+                     out_dtype=None,
+                     interpret: bool = True) -> jax.Array:
+    """NHWC x HWIO VALID conv [+ scale, bias, act] — implicit-GEMM SA-CONV.
+
+    x: (batch, h, w, ci);  f: (p, q, ci, co)  ->  (batch, oh, ow, co).
+    ``x`` must already carry any explicit zero padding (the engine applies
+    it).  ``f`` may be int8 with ``w_scale`` (co,) per-output-channel
+    scales; dequantization fuses into the accumulator-flush epilogue.
+    ``interpret=True`` is the CPU validation mode; on a real TPU backend
+    the same code lowers to Mosaic with the block shapes chosen by
+    :func:`repro.core.dataflow.plan_conv`.
+    """
+    batch, h, w, ci = x.shape
+    p, q, ci2, co = f.shape
+    assert ci == ci2, (x.shape, f.shape)
+    oh = (h - p) // stride + 1
+    ow = (w - q) // stride + 1
+    out_dtype = out_dtype or x.dtype
+    if plan is None:
+        plan = plan_conv(batch, h, w, ci, p, q, co, stride=stride,
+                         bytes_in=x.dtype.itemsize,
+                         bytes_w=f.dtype.itemsize)
+    bi, bj = plan.bi, plan.bj
+    gi, gj = pl.cdiv(ci, bi), pl.cdiv(co, bj)
+    xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, gi * bi - ci))) \
+        if gi * bi != ci else x
+    fp = jnp.pad(f, ((0, 0), (0, 0), (0, gi * bi - ci), (0, gj * bj - co))) \
+        if (gi * bi != ci or gj * bj != co) else f
+    has_bias = bias is not None
+    has_scale = w_scale is not None
+
+    in_specs = [
+        pl.BlockSpec((1, h, w, bi), lambda n_, j, k_: (n_, 0, 0, k_)),
+        pl.BlockSpec((p, q, bi, bj), lambda n_, j, k_: (0, 0, k_, j)),
+    ]
+    args = [xp, fp]
+    if has_scale:
+        sp = jnp.pad(w_scale.reshape(1, co).astype(jnp.float32),
+                     ((0, 0), (0, gj * bj - co)))
+        in_specs.append(pl.BlockSpec((1, bj), lambda n_, j, k_: (0, j)))
+        args.append(sp)
+    if has_bias:
+        bp = jnp.pad(bias, (0, gj * bj - co)).reshape(1, gj * bj)
+        in_specs.append(pl.BlockSpec((1, bj), lambda n_, j, k_: (0, j)))
+        args.append(bp)
+
+    out = pl.pallas_call(
+        functools.partial(_implicit_conv_kernel, stride=stride, oh=oh, ow=ow,
+                          act=act, has_bias=has_bias, has_scale=has_scale,
+                          fuse_taps=plan.fuse_taps),
+        grid=(batch, gj, gi),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, oh, ow, bj),
+                               lambda n_, j, k_: (n_, 0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((batch, oh, ow, gj * bj), out_dtype),
+        scratch_shapes=[pltpu.VMEM((oh * ow, bj), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*args)
+    return out[..., :co]

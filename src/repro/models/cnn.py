@@ -2,8 +2,9 @@
 
 Layer tables match the originals exactly (they reproduce the paper's
 Table I MAC/weight counts; asserted in tests/test_perf_model.py).  The
-forward pass runs every CONV on the SA-CONV dataflow (im2col GEMM), every
-FC on SA-FC when memory-bound, and every pool through the fused
+forward pass runs every CONV on the SA-CONV dataflow (implicit GEMM —
+patch extraction inside the kernel, no materialized im2col), every FC on
+SA-FC when memory-bound, and every pool through the fused
 MaxPool->activation unit — i.e. the complete MPNA operator set.
 """
 from __future__ import annotations
@@ -16,7 +17,6 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.kernels import ref
-from repro.kernels.conv2d import conv2d_mpna
 from repro.kernels.pool_act import maxpool_act
 from repro.models.layers import dense_init
 
@@ -154,23 +154,22 @@ def cnn_forward(name: str, params: list, x: jax.Array, *,
     :class:`~repro.core.engine.Engine` (its backend/interpret then govern
     the CONV kernels too, overriding the ``backend``/``interpret`` args);
     otherwise one is derived from the ambient engine so an active trace /
-    policy / schedule still sees the FC dispatches."""
+    policy / schedule still sees every dispatch.  CONV layers go through
+    ``eng.conv2d`` — the implicit-GEMM SA-CONV kernel on the pallas
+    backend (no materialized im2col patch matrix), planned/traced like
+    every other op and resolvable from a compiled
+    :meth:`~repro.core.schedule.LayerSchedule.compile_cnn` schedule."""
     spec, _ = NETWORKS[name]
     if eng is None:
         eng = engine.current().with_(backend=backend, interpret=interpret)
     use_pallas = eng.backend == "pallas"
     interpret = eng.interpret
+    ci = fi = 0
     for s, p in zip(spec, params):
         if s.kind == "conv":
-            if s.pad:
-                x = jnp.pad(x, ((0, 0), (s.pad, s.pad), (s.pad, s.pad),
-                                (0, 0)))
-            if use_pallas:
-                x = conv2d_mpna(x, p["f"], p["b"], stride=s.stride, act=s.act,
-                                interpret=interpret)
-            else:
-                x = ref.apply_act(ref.conv2d(x, p["f"], stride=s.stride)
-                                  + p["b"], s.act)
+            ci += 1
+            x = eng.conv2d(x, p["f"], p["b"], stride=s.stride, pad=s.pad,
+                           act=s.act, name=f"conv{ci}")
         elif s.kind == "pool":
             if use_pallas:
                 # activation already applied by the conv epilogue; the fused
@@ -181,6 +180,7 @@ def cnn_forward(name: str, params: list, x: jax.Array, *,
             else:
                 x = ref.maxpool2d(x, window=s.kernel, stride=s.stride)
         else:
+            fi += 1
             x = x.reshape(x.shape[0], -1)
-            x = eng.matmul(x, p["w"], p["b"], act=s.act, name="fc")
+            x = eng.matmul(x, p["w"], p["b"], act=s.act, name=f"fc{fi}")
     return x

@@ -6,6 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import quant
 from repro.models import cnn
 
 
@@ -19,6 +20,49 @@ def test_forward_pallas_equals_oracle(net, res):
     y_ref = cnn.cnn_forward(net, params, x, backend="xla")
     assert y_pal.shape == (2, 1000)
     np.testing.assert_allclose(y_pal, y_ref, rtol=3e-4, atol=3e-4)
+
+
+# AlexNet exercises stride 4 + pad {0,1,2} through the whole stack; the
+# off-grid resolutions stress the implicit-GEMM address generation on
+# spatial maps the classic 227/224 schedules never produce.
+@pytest.mark.slow
+@pytest.mark.parametrize("net,res", [("alexnet", 75), ("alexnet", 83),
+                                     ("vgg16", 36)])
+def test_forward_pallas_odd_resolutions(net, res):
+    params = cnn.init_cnn(net, jax.random.PRNGKey(0), in_res=res,
+                          width_mult=0.125)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, res, res, 3),
+                          jnp.float32)
+    y_pal = cnn.cnn_forward(net, params, x, backend="pallas")
+    y_ref = cnn.cnn_forward(net, params, x, backend="xla")
+    np.testing.assert_allclose(y_pal, y_ref, rtol=3e-4, atol=3e-4)
+
+
+def _quantize_cnn(params):
+    out = []
+    for p in params:
+        if "f" in p:
+            out.append({"f": quant.quantize(p["f"]), "b": p["b"]})
+        elif "w" in p:
+            out.append({"w": quant.quantize(p["w"]), "b": p["b"]})
+        else:
+            out.append(p)
+    return out
+
+
+@pytest.mark.slow
+def test_forward_pallas_int8_weights_full_network():
+    """int8 QTensor CONV filters + FC weights through the whole network:
+    the pallas kernels (scale fused at accumulator flush) match the XLA
+    oracle (scale folded into the filter)."""
+    params = _quantize_cnn(cnn.init_cnn("alexnet", jax.random.PRNGKey(0),
+                                        in_res=67, width_mult=0.125))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 67, 67, 3),
+                          jnp.float32)
+    y_pal = cnn.cnn_forward("alexnet", params, x, backend="pallas")
+    y_ref = cnn.cnn_forward("alexnet", params, x, backend="xla")
+    assert y_pal.shape == (2, 1000)
+    np.testing.assert_allclose(y_pal, y_ref, rtol=1e-2, atol=1e-2)
 
 
 def test_layer_shapes_alexnet():
