@@ -47,8 +47,10 @@ def matmul_planner() -> List[Row]:
 
 def conv_planner() -> List[Row]:
     """The conv-aware planner on the paper's own layers: analytic HBM
-    traffic of the implicit-GEMM schedule vs. the compulsory minimum vs.
-    the kernel-area blowup the materialized-im2col path moved."""
+    traffic of the implicit-GEMM schedule (maxpool fused into the flush
+    epilogue where the spec has a trailing pool) vs. the compulsory
+    minimum vs. the kernel-area blowup the materialized-im2col path
+    moved, plus the unfused conv->HBM->pool bytes the fusion deletes."""
     from repro.core.perf_model import pallas_conv_traffic
     rows = []
     for net in ("alexnet", "vgg16"):
@@ -57,6 +59,11 @@ def conv_planner() -> List[Row]:
         us = (time.perf_counter() - t0) * 1e6
         for row in layers[:2]:
             p = row.plan
+            pooltag = ""
+            if p.fuse_pool:
+                pooltag = (f"; pool{p.pool_window}s{p.pool_stride} fused, "
+                           f"unfused path moved "
+                           f"{row.unfused_bytes/2**20:.1f}MiB")
             rows.append((
                 f"conv_planner/{net}/{row.layer}", us / len(layers),
                 f"case{p.case}/{p.regime} bi={p.bi} bj={p.bj} "
@@ -64,7 +71,7 @@ def conv_planner() -> List[Row]:
                 f"(min {row.compulsory_bytes/2**20:.1f}MiB "
                 f"x{p.hbm_bytes/row.compulsory_bytes:.2f}; im2col moved "
                 f"{row.im2col_bytes/2**20:.1f}MiB "
-                f"x{row.im2col_bytes/p.hbm_bytes:.1f})"))
+                f"x{row.im2col_bytes/p.hbm_bytes:.1f}{pooltag})"))
     return rows
 
 

@@ -10,12 +10,16 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import kernel_bench, paper_figures, roofline_report
+    from benchmarks import conv_fused, kernel_bench, paper_figures, \
+        roofline_report
 
     groups = []
     groups += paper_figures.ALL
     groups += kernel_bench.ALL
     groups += roofline_report.ALL
+    # fused SA-CONV->maxpool epilogue: wall + planner bytes, fused vs
+    # unfused — also writes the machine-readable BENCH_conv_fused.json
+    groups += [conv_fused.bench_rows]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -119,12 +119,16 @@ def main() -> None:
     print("\n".join("  " + line for line in sched.table().splitlines()))
 
     print("\n== implicit-GEMM CONV traffic vs the deleted im2col path ==")
+    print("   (conv+pool pairs run the fused flush epilogue: the full OFM")
+    print("    never crosses HBM — 'unfused' is the conv->HBM->pool bytes)")
     for row in PM.pallas_conv_traffic("alexnet", batch=1):
         p = row.plan
+        pooltag = f" pool{p.pool_window}s{p.pool_stride} fused, unfused " \
+            f"path {row.unfused_bytes/2**20:.1f} MiB" if p.fuse_pool else ""
         print(f"  {row.layer}: planned {p.hbm_bytes/2**20:6.1f} MiB "
               f"(compulsory {row.compulsory_bytes/2**20:6.1f}, "
               f"im2col path moved {row.im2col_bytes/2**20:6.1f}) "
-              f"case {p.case} tile (bi={p.bi}, bj={p.bj})")
+              f"case {p.case} tile (bi={p.bi}, bj={p.bj}){pooltag}")
 
     print("\n== analytic: the paper's headline numbers ==")
     print(f"  Fig 12a  SA-FC speedup on FC : "

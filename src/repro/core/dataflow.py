@@ -29,7 +29,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 from repro.core.accelerator import TPU_V5E, TPUChip
 
@@ -242,6 +242,37 @@ def compulsory_bytes(m: int, n: int, k: int,
 #: :attr:`ConvPlan.fuse_taps` — the kernel obeys the plan.
 TAP_FUSE_ELEMS = 1 << 22
 
+#: Activations the pooling-&-activation unit may be reordered past
+#: (paper Sec. IV-D): act(maxpool(x)) == maxpool(act(x)) holds exactly for
+#: monotone non-decreasing element-wise functions.  Non-monotone acts
+#: (silu, gelu) make the planner decline pool fusion.
+MONOTONE_ACTS = frozenset({"none", "relu", "leaky_relu"})
+
+
+@dataclass(frozen=True)
+class PoolSpec:
+    """One maxpool stage (the paper's pooling-&-activation unit, Fig. 7F-I).
+    ``stride`` defaults to ``window`` (non-overlapping)."""
+    window: int
+    stride: int = 0
+
+    def __post_init__(self) -> None:
+        if self.stride == 0:
+            object.__setattr__(self, "stride", self.window)
+
+    def out(self, oh: int, ow: int) -> Tuple[int, int]:
+        return ((oh - self.window) // self.stride + 1,
+                (ow - self.window) // self.stride + 1)
+
+    def tiles(self, oh: int, ow: int) -> bool:
+        """Do the pool windows cover the OFM exactly (no VALID-mode tail
+        row/column dropped)?  The fused epilogue only claims pools whose
+        windows tile the accumulator tile; a pool that drops a tail falls
+        back to the standalone pooling-&-activation pass."""
+        return (oh >= self.window and ow >= self.window
+                and (oh - self.window) % self.stride == 0
+                and (ow - self.window) % self.stride == 0)
+
 
 @dataclass(frozen=True)
 class ConvPlan:
@@ -262,6 +293,16 @@ class ConvPlan:
     contraction (``batch*oh*ow`` x ``p*q*ci`` @ ``p*q*ci`` x ``co``) —
     what the systolic array actually contracts and what the dispatch trace
     reports.
+
+    ``fuse_pool`` commits the accumulator-flush epilogue to reduce the
+    maxpool windows on-chip and emit the *pooled* output block (the
+    paper's Fig. 7 pooling-&-activation unit sitting after accumulation):
+    the full OFM never reaches HBM, so ``hbm_bytes`` is credited with the
+    eliminated OFM write + re-read and ``vmem_bytes`` charges the pooled
+    output block instead of the full one.  The planner declines fusion
+    (``fuse_pool=False``, engine falls back to conv -> standalone pool)
+    for non-monotone activations, pools whose windows don't tile the OFM,
+    and budgets that can't hold even the minimum fused working set.
     """
     case: int                       # 1..4 (buffer-fit scenario analog)
     regime: str                     # 'sa_conv' | 'sa_fc' (policy-forced)
@@ -274,6 +315,9 @@ class ConvPlan:
     m: int
     n: int
     k: int
+    fuse_pool: bool = False         # pooled flush epilogue committed?
+    pool_window: int = 0            # maxpool window (0 when not fused)
+    pool_stride: int = 0
 
     @property
     def arithmetic_intensity(self) -> float:
@@ -327,7 +371,9 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
               bytes_w: int | None = None,
               vmem_budget: int | None = None,
               chip: TPUChip = TPU_V5E,
-              regime: str | None = None) -> ConvPlan:
+              regime: str | None = None,
+              pool: Optional[PoolSpec] = None,
+              act: str = "none") -> ConvPlan:
     """Pick channel tiles + loop order for an NHWC x HWIO VALID conv.
 
     ``h``/``w`` are the *padded* input spatial dims (the caller applies
@@ -344,6 +390,16 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
     This counts *real NHWC bytes* — the materialized-im2col path the kernel
     replaces moved ``batch*oh*ow*p*q*ci`` input-patch bytes (a kernel-area
     blowup) that no planner ever saw.
+
+    ``pool`` requests the fused maxpool+activation flush epilogue for the
+    maxpool stage that follows this conv: when the planner accepts
+    (:attr:`ConvPlan.fuse_pool`), the o-bytes term above shrinks to the
+    *pooled* map ``batch*poh*pow*co*bytes_out`` — the OFM write and the
+    pool pass's re-read both disappear.  Fusion is declined (plan falls
+    back to the unfused epilogue) when ``act`` is not in
+    :data:`MONOTONE_ACTS` (the reorder act(maxpool(.)) is invalid), when
+    the pool windows don't tile the OFM, or when no tiling fits the VMEM
+    budget.
     """
     budget = vmem_budget if vmem_budget is not None else chip.vmem_budget
     bw = bytes_w if bytes_w is not None else bytes_in
@@ -358,11 +414,15 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
                                       bytes_out=bytes_out, bytes_w=bw,
                                       chip=chip)
 
+    fuse_pool = (pool is not None and act in MONOTONE_ACTS
+                 and pool.tiles(oh, ow))
+    poh, pow_ = pool.out(oh, ow) if fuse_pool else (oh, ow)
+
     def vmem(bi: int, bj: int, fused: bool) -> int:
         base = (2 * h * w * bi * bytes_in        # input slab, double-buffered
                 + 2 * p * q * bi * bj * bw       # 'parallel weight movement'
                 + oh * ow * bj * 4               # fp32 accumulator SPM
-                + oh * ow * bj * bytes_out)      # output tile
+                + poh * pow_ * bj * bytes_out)   # (pooled) output tile
         if fused:
             # the on-chip (oh*ow, p*q*bi) patch tile the fused MXU pass
             # assembles (it never exists in HBM, but it IS working set)
@@ -387,11 +447,13 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
         # with a single CI tile the slab index is constant across the CO
         # loop (one fetch per sample); likewise the filter re-streams per
         # sample only when the (j, k) sweep actually revisits tiles.
+        # With fuse_pool the output term is the POOLED map (poh == oh and
+        # pow_ == ow otherwise): the full OFM never crosses HBM.
         x_passes = gj if gi > 1 else 1
         w_passes = batch if gi * gj > 1 else 1
         total = (batch * h * w * cip * bytes_in * x_passes
                  + p * q * cip * cop * bw * w_passes
-                 + batch * oh * ow * cop * bytes_out)
+                 + batch * poh * pow_ * cop * bytes_out)
         # Tiles that don't divide the channel counts force materialized
         # zero-padded copies (and an output slice-back) around the kernel
         # — real HBM bytes, charged so plan == execution and the search
@@ -401,7 +463,7 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
         if cip != ci or cop != co:
             total += p * q * (ci * co + cip * cop) * bw
         if cop != co:
-            total += batch * oh * ow * (cop + co) * bytes_out
+            total += batch * poh * pow_ * (cop + co) * bytes_out
         return total
 
     def case(bi: int, bj: int) -> int:
@@ -432,27 +494,55 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
         # working set rather than fail: the plan is over budget and says
         # so honestly in vmem_bytes (on CPU interpret this still runs;
         # a TPU lowering would need the future spatially-tiled schedule).
+        # A requested pool fusion is declined here — the budget-overflow
+        # fallback sticks to the minimal, well-trodden unfused epilogue.
+        if fuse_pool:
+            return plan_conv(batch, h, w, ci, p, q, co, stride=stride,
+                             bytes_in=bytes_in, bytes_out=bytes_out,
+                             bytes_w=bytes_w, vmem_budget=vmem_budget,
+                             chip=chip, regime=regime)
         bi = _channel_tiles(ci)[0]
         bj = _channel_tiles(co)[0]
         fused = False
         final_case = 4
     return ConvPlan(final_case, regime, bi, bj, fuse_taps=fused,
                     hbm_bytes=traffic(bi, bj), flops=flops,
-                    vmem_bytes=vmem(bi, bj, fused), m=m, n=n, k=k)
+                    vmem_bytes=vmem(bi, bj, fused), m=m, n=n, k=k,
+                    fuse_pool=fuse_pool,
+                    pool_window=pool.window if fuse_pool else 0,
+                    pool_stride=pool.stride if fuse_pool else 0)
 
 
 def compulsory_conv_bytes(batch: int, h: int, w: int, ci: int,
                           p: int, q: int, co: int, *,
                           stride: int = 1,
                           bytes_in: int = 2, bytes_out: int = 4,
-                          bytes_w: int | None = None) -> int:
+                          bytes_w: int | None = None,
+                          pool: Optional[PoolSpec] = None) -> int:
     """Lower bound for the conv: every NHWC/HWIO byte touched exactly once
-    (what the paper's Fig. 5/7 reuse maximization drives toward)."""
+    (what the paper's Fig. 5/7 reuse maximization drives toward).  With
+    ``pool`` the op is the fused conv+maxpool and its irreducible output
+    is the *pooled* map — the full OFM never needs to exist in HBM."""
     bw = bytes_w if bytes_w is not None else bytes_in
     oh = (h - p) // stride + 1
     ow = (w - q) // stride + 1
+    if pool is not None:
+        oh, ow = pool.out(oh, ow)
     return (batch * h * w * ci * bytes_in + p * q * ci * co * bw
             + batch * oh * ow * co * bytes_out)
+
+
+def pool_roundtrip_bytes(batch: int, oh: int, ow: int, co: int,
+                         pool: PoolSpec, *, bytes_out: int = 4) -> int:
+    """HBM bytes a *standalone* maxpool pass adds on top of an unfused
+    conv -> HBM -> pool composition: the full OFM re-read plus the pooled
+    write (the conv's own OFM write is already inside its plan's
+    ``hbm_bytes``).  The single source of the fused-vs-unfused byte delta
+    reported by :func:`repro.core.perf_model.pallas_conv_traffic` and
+    :func:`repro.core.roofline.fused_pool_traffic_from_schedule`."""
+    poh, pow_ = pool.out(oh, ow)
+    return (batch * oh * ow * co * bytes_out
+            + batch * poh * pow_ * co * bytes_out)
 
 
 def im2col_bytes(batch: int, h: int, w: int, ci: int,

@@ -50,8 +50,9 @@ import jax.numpy as jnp
 
 from repro.core import dataflow
 from repro.core.accelerator import TPU_V5E, TPUChip
-from repro.core.dataflow import ConvPlan, MatmulPlan
+from repro.core.dataflow import ConvPlan, MatmulPlan, PoolSpec
 from repro.kernels import ref
+from repro.kernels.pool_act import maxpool_act
 from repro.kernels.sa_conv import sa_conv_matmul
 from repro.kernels.sa_conv_implicit import sa_conv_implicit
 from repro.kernels.sa_fc import sa_fc_matmul
@@ -65,7 +66,7 @@ class DispatchRecord:
     """One dispatch decision.  Supports ``rec["regime"]`` for
     backward-compatibility with the dict-based trace."""
     name: str
-    regime: str                 # 'sa_conv' | 'sa_fc' | 'attention'
+    regime: str                 # 'sa_conv' | 'sa_fc' | 'attention' | 'pool'
     m: int
     n: int
     k: int
@@ -79,6 +80,9 @@ class DispatchRecord:
     # (batch, h, w, ci, p, q, co, stride) — h/w are the padded input dims.
     conv_plan: Optional[ConvPlan] = None
     conv_shape: Optional[Tuple[int, ...]] = None
+    # the maxpool stage requested to ride this conv's flush epilogue; the
+    # accepted/declined decision is conv_plan.fuse_pool
+    pool: Optional[PoolSpec] = None
 
     def __getitem__(self, key: str) -> Any:
         return getattr(self, key)
@@ -119,9 +123,18 @@ class DispatchTrace:
         return out
 
     def summary(self) -> str:
-        lines = [f"{r.name:24s} {r.regime:9s} case={r.case} "
-                 f"({r.m}x{r.k})@({r.k}x{r.n}) w={r.weight_dtype or '-'} "
-                 f"{r.schedule or 'planned'}" for r in self.records]
+        lines = []
+        for r in self.records:
+            fused = ""
+            if r.conv_plan is not None and r.conv_plan.fuse_pool:
+                fused = (f" +pool{r.conv_plan.pool_window}"
+                         f"s{r.conv_plan.pool_stride}")
+            elif r.pool is not None and r.conv_plan is not None:
+                fused = " pool-declined"
+            lines.append(f"{r.name:24s} {r.regime:9s} case={r.case} "
+                         f"({r.m}x{r.k})@({r.k}x{r.n}) "
+                         f"w={r.weight_dtype or '-'} "
+                         f"{r.schedule or 'planned'}{fused}")
         return "\n".join(lines)
 
 
@@ -189,14 +202,18 @@ class DispatchPolicy:
     def plan_conv(self, batch: int, h: int, w: int, ci: int,
                   p: int, q: int, co: int, stride: int, *, act_bytes: int,
                   weight_bytes: Optional[int] = None,
-                  regime: Optional[str] = None) -> ConvPlan:
+                  regime: Optional[str] = None,
+                  pool: Optional[PoolSpec] = None,
+                  act: str = "none") -> ConvPlan:
         """Conv-aware planning under this policy's chip/VMEM budget —
         the CONV twin of :meth:`plan` (traffic counted in real NHWC bytes,
-        not patch-matrix bytes)."""
+        not patch-matrix bytes).  ``pool`` requests the fused
+        maxpool+activation flush epilogue; the planner may decline
+        (``fuse_pool=False`` on the returned plan)."""
         return _cached_conv_plan(self, batch, h, w, ci, p, q, co, stride,
                                  act_bytes,
                                  weight_bytes if weight_bytes is not None
-                                 else act_bytes, regime)
+                                 else act_bytes, regime, pool, act)
 
 
 @functools.lru_cache(maxsize=4096)
@@ -212,11 +229,12 @@ def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
 def _cached_conv_plan(policy: DispatchPolicy, batch: int, h: int, w: int,
                       ci: int, p: int, q: int, co: int, stride: int,
                       act_bytes: int, weight_bytes: int,
-                      regime: Optional[str]) -> ConvPlan:
+                      regime: Optional[str],
+                      pool: Optional[PoolSpec], act: str) -> ConvPlan:
     return dataflow.plan_conv(
         batch, h, w, ci, p, q, co, stride=stride, bytes_in=act_bytes,
         bytes_w=weight_bytes, vmem_budget=policy.vmem_budget,
-        chip=policy.chip, regime=regime)
+        chip=policy.chip, regime=regime, pool=pool, act=act)
 
 
 # ---------------------------------------------------------------------------
@@ -463,17 +481,21 @@ class Engine:
 
     def plan_conv_for(self, name: str, batch: int, h: int, w: int, ci: int,
                       p: int, q: int, co: int, stride: int, *,
-                      dtype, weight_dtype) -> Tuple[ConvPlan, str]:
+                      dtype, weight_dtype,
+                      pool: Optional[PoolSpec] = None,
+                      act: str = "none") -> Tuple[ConvPlan, str]:
         """(conv plan, 'hit'|'miss'|'') for one named CONV op — schedule
         lookup with policy fallback.  ``h``/``w`` are the padded input
-        spatial dims."""
+        spatial dims; ``pool`` is the maxpool stage requested to ride the
+        flush epilogue (the plan's ``fuse_pool`` records the decision)."""
         act_bytes = jnp.dtype(dtype).itemsize
         w_bytes = jnp.dtype(weight_dtype).itemsize
         state = ""
         if self.schedule is not None:
             plan = self.schedule.lookup_conv(
                 name, batch, h, w, ci, p, q, co, stride,
-                str(jnp.dtype(dtype)), str(jnp.dtype(weight_dtype)))
+                str(jnp.dtype(dtype)), str(jnp.dtype(weight_dtype)),
+                pool=pool)
             if plan is not None:
                 return plan, "hit"
             state = "miss"
@@ -483,7 +505,8 @@ class Engine:
                                              weight_bytes=w_bytes)
         plan = self.policy.plan_conv(batch, h, w, ci, p, q, co, stride,
                                      act_bytes=act_bytes,
-                                     weight_bytes=w_bytes, regime=regime)
+                                     weight_bytes=w_bytes, regime=regime,
+                                     pool=pool, act=act)
         return plan, state
 
     # -- ops ----------------------------------------------------------------
@@ -539,6 +562,7 @@ class Engine:
 
     def conv2d(self, x: jax.Array, f, bias: Optional[jax.Array] = None, *,
                stride: int = 1, pad: int = 0, act: str = "none",
+               pool: Optional[PoolSpec] = None,
                name: str = "conv", out_dtype=None) -> jax.Array:
         """NHWC x HWIO convolution with fused bias+activation epilogue,
         planned by the engine's policy/schedule and executed on the
@@ -548,6 +572,17 @@ class Engine:
         ``f`` may be a :class:`repro.core.quant.QTensor` (int8 + per-output-
         channel scales): the int8 filter reaches the kernel un-dequantized
         and the scale fuses into the accumulator-flush epilogue.
+
+        ``pool`` requests the following maxpool stage to ride the same
+        epilogue (the paper's pooling-&-activation unit after accumulation,
+        Fig. 7): semantics are ``maxpool(act(conv(x) + bias))``.  The
+        *planner* owns the decision — when the plan accepts
+        (``conv_plan.fuse_pool`` in the trace) the kernel emits the pooled
+        map directly and the full OFM never crosses HBM; when it declines
+        (non-monotone ``act``, pool windows that don't tile the OFM, VMEM
+        budget overflow) the conv runs unfused and the pool is dispatched
+        as a standalone :meth:`pool` pass (visible in the trace as
+        ``<name>.pool``).
 
         ``plan.regime`` names the *array* the schedule assigns the layer
         to — the paper runs CONV on both arrays (SA-FC is CONV-capable,
@@ -566,24 +601,54 @@ class Engine:
         assert ci == ci2, (x.shape, fq.shape)
         plan, sched = self.plan_conv_for(name, batch, h, w, ci, p, q, co,
                                          stride, dtype=x.dtype,
-                                         weight_dtype=fq.dtype)
+                                         weight_dtype=fq.dtype,
+                                         pool=pool, act=act)
         self._record(name=name, regime=plan.regime, m=plan.m, n=plan.n,
                      k=plan.k, case=plan.case, backend=self.backend,
                      dtype=str(x.dtype), weight_dtype=str(fq.dtype),
                      schedule=sched, conv_plan=plan,
-                     conv_shape=(batch, h, w, ci, p, q, co, stride))
+                     conv_shape=(batch, h, w, ci, p, q, co, stride),
+                     pool=pool)
         out_dt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
         if self.backend == "pallas":
-            return sa_conv_implicit(x, fq, bias, stride=stride, act=act,
-                                    plan=plan, w_scale=f_scale,
-                                    out_dtype=out_dt,
-                                    interpret=self.interpret)
-        ff = fq if f_scale is None else \
-            (fq.astype(jnp.float32) * f_scale.reshape(1, 1, 1, co))
-        out = ref.conv2d(x, ff, stride=stride, out_dtype=jnp.float32)
-        if bias is not None:
-            out = out + bias.astype(jnp.float32)
-        return ref.apply_act(out, act).astype(out_dt)
+            out = sa_conv_implicit(x, fq, bias, stride=stride, act=act,
+                                   plan=plan, w_scale=f_scale,
+                                   out_dtype=out_dt,
+                                   interpret=self.interpret)
+        else:
+            ff = fq if f_scale is None else \
+                (fq.astype(jnp.float32) * f_scale.reshape(1, 1, 1, co))
+            out = ref.conv2d(x, ff, stride=stride, out_dtype=jnp.float32)
+            if bias is not None:
+                out = out + bias.astype(jnp.float32)
+            out = ref.apply_act(out, act).astype(out_dt)
+            if plan.fuse_pool:
+                out = ref.maxpool2d(out, window=plan.pool_window,
+                                    stride=plan.pool_stride)
+        if pool is not None and not plan.fuse_pool:
+            # planner declined: run the paper's standalone pooling unit,
+            # dispatched (and traced) in its own right
+            out = self.pool(out, window=pool.window, stride=pool.stride,
+                            name=f"{name}.pool")
+        return out
+
+    def pool(self, x: jax.Array, *, window: int, stride: Optional[int] = None,
+             act: str = "none", name: str = "pool") -> jax.Array:
+        """Standalone maxpool + activation (the paper's pooling-&-activation
+        unit as its own dispatch): recorded in the trace like every other
+        op instead of bypassing the engine.  Unfused pool layers and
+        declined conv+pool fusions route here."""
+        stride = stride if stride is not None else window
+        n, h, w, c = x.shape
+        oh = (h - window) // stride + 1
+        ow = (w - window) // stride + 1
+        self._record(name=name, regime="pool", m=n * oh * ow, n=c,
+                     k=window * window, case=0, backend=self.backend,
+                     dtype=str(x.dtype), pool=PoolSpec(window, stride))
+        if self.backend == "pallas":
+            return maxpool_act(x, window=window, stride=stride, act=act,
+                               interpret=self.interpret)
+        return ref.maxpool_act(x, window=window, stride=stride, act=act)
 
     def attention(self, q, k, v, *, causal=True, window=0, softcap=0.0,
                   scale=None, name="attn"):
@@ -643,10 +708,11 @@ def matmul(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
 
 def conv2d(x: jax.Array, f, bias: Optional[jax.Array] = None, *,
            stride: int = 1, pad: int = 0, act: str = "none",
+           pool: Optional[PoolSpec] = None,
            name: str = "conv", out_dtype=None) -> jax.Array:
     """Deprecated shim: ``current().conv2d(...)``."""
     return current().conv2d(x, f, bias, stride=stride, pad=pad, act=act,
-                            name=name, out_dtype=out_dtype)
+                            pool=pool, name=name, out_dtype=out_dtype)
 
 
 def attention(q, k, v, *, causal=True, window=0, softcap=0.0,

@@ -45,8 +45,9 @@ from typing import Iterable, List, Optional
 
 from repro.core.accelerator import ENERGY_PJ, MPNA_PAPER, MPNAConfig, \
     SystolicArray, TPU_V5E, TPUChip
-from repro.core.dataflow import (ConvPlan, compulsory_conv_bytes,
-                                 im2col_bytes, plan_conv)
+from repro.core.dataflow import (ConvPlan, PoolSpec, compulsory_conv_bytes,
+                                 im2col_bytes, plan_conv,
+                                 pool_roundtrip_bytes)
 from repro.models.cnn import LayerStats, network_stats
 
 
@@ -300,9 +301,20 @@ def fig12c_access_reduction(net: str = "alexnet", *,
 @dataclass(frozen=True)
 class ConvLayerTraffic:
     layer: str
-    plan: ConvPlan
-    compulsory_bytes: int          # every NHWC/HWIO byte exactly once
+    plan: ConvPlan                 # the plan the schedule runs (pool fused
+    #                                into the flush epilogue when accepted)
+    compulsory_bytes: int          # every NHWC/HWIO byte exactly once (the
+    #                                fused op's pooled output when fused)
     im2col_bytes: int              # what the materialized-patch path moved
+    pool: Optional[PoolSpec] = None   # the maxpool stage following this conv
+    unfused_bytes: int = 0         # unfused conv plan + standalone-pool OFM
+    #                                roundtrip (== plan.hbm_bytes, no pool)
+
+    @property
+    def fused_saving_bytes(self) -> int:
+        """HBM bytes the fused epilogue eliminates vs. the unfused
+        conv -> HBM -> pool composition (0 when nothing fused)."""
+        return self.unfused_bytes - self.plan.hbm_bytes
 
 
 def pallas_conv_traffic(net: str, *, batch: int = 1,
@@ -310,33 +322,60 @@ def pallas_conv_traffic(net: str, *, batch: int = 1,
                         bytes_in: int = 4, bytes_w: Optional[int] = None,
                         bytes_out: int = 4,
                         chip: TPUChip = TPU_V5E,
-                        vmem_budget: Optional[int] = None
+                        vmem_budget: Optional[int] = None,
+                        fuse_pool: bool = True
                         ) -> List[ConvLayerTraffic]:
     """Per-CONV-layer analytic HBM traffic of the implicit-GEMM path:
     planner bytes vs. the compulsory minimum vs. the im2col blowup the
     kernel deleted.  Layer geometry comes from
     :func:`repro.models.cnn.network_stats` (single source of truth for
     the shape propagation); only the explicit padding is read off the
-    layer spec."""
+    layer spec.
+
+    Each conv immediately followed by a maxpool in the network spec is
+    planned as the FUSED conv+pool op (what
+    :meth:`~repro.core.schedule.LayerSchedule.compile_cnn` schedules);
+    ``unfused_bytes`` reports the same layer costed as unfused conv plus
+    the standalone pool's OFM write + re-read + pooled write, so every row
+    carries the fused-vs-unfused byte delta.  ``fuse_pool=False`` plans
+    every conv unfused (ablation)."""
     from repro.models.cnn import NETWORKS, network_stats
     spec, _ = NETWORKS[net]
     convs = [l for l in network_stats(net, in_res=in_res, in_ch=in_ch)
              if l.kind == "conv"]
+    # the maxpool spec that immediately follows each conv, if any
+    pools = [spec[i + 1] if i + 1 < len(spec) and spec[i + 1].kind == "pool"
+             else None
+             for i, s in enumerate(spec) if s.kind == "conv"]
     conv_specs = [s for s in spec if s.kind == "conv"]
     out: List[ConvLayerTraffic] = []
-    for l, s in zip(convs, conv_specs):
+    for l, s, ps in zip(convs, conv_specs, pools):
         res, _, ch = l.ifm
         hp = res + 2 * s.pad                        # padded input edge
         kw = dict(stride=s.stride, bytes_in=bytes_in, bytes_w=bytes_w,
                   bytes_out=bytes_out)
+        pool = PoolSpec(ps.kernel, ps.stride) \
+            if (ps is not None and fuse_pool) else None
         plan = plan_conv(batch, hp, hp, ch, s.kernel, s.kernel, s.out_ch,
-                         vmem_budget=vmem_budget, chip=chip, **kw)
+                         vmem_budget=vmem_budget, chip=chip, pool=pool,
+                         act=s.act, **kw)
+        unfused = plan.hbm_bytes
+        if plan.fuse_pool:
+            uplan = plan_conv(batch, hp, hp, ch, s.kernel, s.kernel,
+                              s.out_ch, vmem_budget=vmem_budget, chip=chip,
+                              **kw)
+            unfused = uplan.hbm_bytes + pool_roundtrip_bytes(
+                batch, l.ofm[0], l.ofm[1], s.out_ch, pool,
+                bytes_out=bytes_out)
         out.append(ConvLayerTraffic(
             l.name, plan,
             compulsory_conv_bytes(batch, hp, hp, ch, s.kernel, s.kernel,
-                                  s.out_ch, **kw),
+                                  s.out_ch,
+                                  pool=pool if plan.fuse_pool else None,
+                                  **kw),
             im2col_bytes(batch, hp, hp, ch, s.kernel, s.kernel, s.out_ch,
-                         **kw)))
+                         **kw),
+            pool=pool, unfused_bytes=unfused))
     return out
 
 

@@ -463,9 +463,11 @@ def terms_from_schedule(schedule, chips: int = 1,
     :class:`repro.core.schedule.LayerSchedule`: sums each scheduled op's
     planner-analytic FLOPs and HBM traffic — matmul AND conv entries (the
     conv term counts the implicit-GEMM kernel's real NHWC bytes, not
-    patch-matrix bytes).  The offline counterpart of the HLO-derived terms
-    above — what the schedule *commits to* before any lowering; no
-    collective term, single-chip analytic view."""
+    patch-matrix bytes; a conv entry whose plan fused the following
+    maxpool into its flush epilogue contributes only the *pooled* output
+    bytes).  The offline counterpart of the HLO-derived terms above —
+    what the schedule *commits to* before any lowering; no collective
+    term, single-chip analytic view."""
     plans = list(getattr(schedule, "plans", schedule.values)())
     flops = float(sum(p.flops for p in plans))
     hbm = float(sum(p.hbm_bytes for p in plans))
@@ -473,6 +475,41 @@ def terms_from_schedule(schedule, chips: int = 1,
                          hbm_bytes_per_chip=hbm / chips,
                          wire_bytes_per_chip=0.0, chips=chips,
                          model_flops=model_flops)
+
+
+def fused_pool_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
+    """Per-conv-entry fused-vs-unfused HBM accounting from a compiled
+    schedule: for every conv entry that committed a fused-pool flush
+    epilogue, the bytes the schedule moves vs. what the unfused
+    conv -> HBM -> standalone-pool composition would move (the eliminated
+    OFM write + re-read is the difference, plus any tiling change).
+    Entries without an accepted pool fusion report a zero saving."""
+    import numpy as _np
+
+    from repro.core.dataflow import (PoolSpec, plan_conv,
+                                     pool_roundtrip_bytes)
+
+    out: Dict[str, Dict[str, float]] = {}
+    policy = schedule.policy
+    for key, plan in getattr(schedule, "conv_entries", {}).items():
+        bytes_in = _np.dtype(key.dtype).itemsize
+        bytes_w = _np.dtype(key.weight_dtype).itemsize
+        fused = float(plan.hbm_bytes)
+        unfused = fused
+        if plan.fuse_pool:
+            uplan = plan_conv(key.batch, key.h, key.w, key.ci, key.p,
+                              key.q, key.co, stride=key.stride,
+                              bytes_in=bytes_in, bytes_w=bytes_w,
+                              vmem_budget=policy.vmem_budget,
+                              chip=policy.chip, regime=plan.regime)
+            oh = (key.h - key.p) // key.stride + 1
+            ow = (key.w - key.q) // key.stride + 1
+            unfused = float(uplan.hbm_bytes + pool_roundtrip_bytes(
+                key.batch, oh, ow, key.co,
+                PoolSpec(plan.pool_window, plan.pool_stride)))
+        out[key.name] = {"fused_bytes": fused, "unfused_bytes": unfused,
+                         "saving_bytes": unfused - fused}
+    return out
 
 
 def model_flops_train(n_active_params: int, tokens: int) -> float:

@@ -50,7 +50,10 @@ class OpKey:
 @dataclass(frozen=True)
 class ConvOpKey:
     """Identity of one scheduled CONV op.  ``h``/``w`` are the *padded*
-    input spatial dims (what the kernel actually sees)."""
+    input spatial dims (what the kernel actually sees).
+    ``pool_window``/``pool_stride`` identify the maxpool stage *requested*
+    to ride the flush epilogue (0/0 = plain conv); whether the plan
+    accepted is recorded on the plan itself (``ConvPlan.fuse_pool``)."""
     name: str
     batch: int
     h: int
@@ -62,6 +65,8 @@ class ConvOpKey:
     stride: int
     dtype: str
     weight_dtype: str
+    pool_window: int = 0
+    pool_stride: int = 0
 
 
 class LayerSchedule(Mapping):
@@ -116,10 +121,13 @@ class LayerSchedule(Mapping):
 
     def lookup_conv(self, name: str, batch: int, h: int, w: int, ci: int,
                     p: int, q: int, co: int, stride: int,
-                    dtype: str, weight_dtype: str) -> Optional[ConvPlan]:
+                    dtype: str, weight_dtype: str, *,
+                    pool=None) -> Optional[ConvPlan]:
         return self._conv_entries.get(
             ConvOpKey(name, batch, h, w, ci, p, q, co, stride,
-                      dtype, weight_dtype))
+                      dtype, weight_dtype,
+                      pool.window if pool is not None else 0,
+                      pool.stride if pool is not None else 0))
 
     def plans(self):
         """Every plan in the schedule (matmul + conv) — what the offline
@@ -132,9 +140,13 @@ class LayerSchedule(Mapping):
         lines = [f"[{self.phase}] {len(self) + len(self._conv_entries)} "
                  f"scheduled ops"]
         for ckey, cplan in self._conv_entries.items():
+            pooltag = ""
+            if ckey.pool_window:
+                pooltag = (f"+pool{ckey.pool_window}s{ckey.pool_stride}"
+                           f"{'' if cplan.fuse_pool else '(declined)'} ")
             lines.append(
                 f"  {ckey.name:24s} conv {ckey.h}x{ckey.w}x{ckey.ci} "
-                f"*{ckey.p}x{ckey.q}->{ckey.co} s{ckey.stride} "
+                f"*{ckey.p}x{ckey.q}->{ckey.co} s{ckey.stride} {pooltag}"
                 f"w={ckey.weight_dtype:8s} -> {cplan.regime:8s} "
                 f"case {cplan.case} tile (bi={cplan.bi},bj={cplan.bj}) "
                 f"hbm {cplan.hbm_bytes / 2**20:.1f} MiB")
@@ -236,8 +248,12 @@ def _entries_from_trace(tr) -> Tuple[Dict[OpKey, MatmulPlan],
     conv_entries: Dict[ConvOpKey, ConvPlan] = {}
     for rec in tr:
         if rec.conv_plan is not None and rec.conv_shape is not None:
+            pool = getattr(rec, "pool", None)
             conv_entries[ConvOpKey(rec.name, *rec.conv_shape, rec.dtype,
-                                   rec.weight_dtype)] = rec.conv_plan
+                                   rec.weight_dtype,
+                                   pool.window if pool is not None else 0,
+                                   pool.stride if pool is not None else 0)
+                         ] = rec.conv_plan
         elif rec.plan is not None and rec.regime in ("sa_conv", "sa_fc"):
             entries[OpKey(rec.name, rec.m, rec.n, rec.k, rec.dtype,
                           rec.weight_dtype)] = rec.plan

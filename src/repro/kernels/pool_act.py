@@ -48,8 +48,13 @@ def maxpool_act(x: jax.Array, *, window: int = 2, stride: int = 2,
     ow = (w - window) // stride + 1
     bc = min(bc, c)
     if c % bc:                                    # pad channels to tile
+        # identity element of max for the dtype: -inf for floats, the most
+        # negative representable value for ints (0 would beat genuinely
+        # all-negative integer lanes)
+        lo = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) \
+            else jnp.iinfo(x.dtype).min
         x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, bc - c % bc)),
-                    constant_values=-jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else 0)
+                    constant_values=lo)
     cp = x.shape[-1]
 
     out = pl.pallas_call(

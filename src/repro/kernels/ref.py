@@ -102,9 +102,11 @@ def conv2d(x: jax.Array, f: jax.Array, *, stride: int = 1,
 
 
 def maxpool2d(x: jax.Array, *, window: int = 2, stride: int = 2) -> jax.Array:
+    lo = -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) \
+        else jnp.iinfo(x.dtype).min
     return jax.lax.reduce_window(
-        x, -jnp.inf if jnp.issubdtype(x.dtype, jnp.floating) else jnp.iinfo(x.dtype).min,
-        jax.lax.max, (1, window, window, 1), (1, stride, stride, 1), "VALID")
+        x, jnp.asarray(lo, x.dtype), jax.lax.max,
+        (1, window, window, 1), (1, stride, stride, 1), "VALID")
 
 
 def maxpool_act(x: jax.Array, *, window: int = 2, stride: int = 2,

@@ -44,7 +44,8 @@ from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 def _implicit_conv_kernel(x_ref, f_ref, *rest, stride: int, oh: int, ow: int,
                           act: str, has_bias: bool, has_scale: bool,
-                          fuse_taps: bool):
+                          fuse_taps: bool, pool_window: int = 0,
+                          pool_stride: int = 0):
     rest = list(rest)
     s_ref = rest.pop(0) if has_scale else None
     b_ref = rest.pop(0) if has_bias else None
@@ -96,8 +97,31 @@ def _implicit_conv_kernel(x_ref, f_ref, *rest, stride: int, oh: int, ow: int,
             out = out * s_ref[...].astype(jnp.float32)
         if has_bias:
             out = out + b_ref[...].astype(jnp.float32)
-        o_ref[...] = ref.apply_act(out, act).reshape(
-            1, oh, ow, -1).astype(o_ref.dtype)
+        if pool_window:
+            # The pooling-&-activation unit sits right after accumulation
+            # (paper Fig. 7): reduce the maxpool windows over the resident
+            # accumulator tile via window^2 shifted strided-max views (the
+            # pool_act.py trick) and emit the POOLED block — the full OFM
+            # never leaves VMEM, and the activation runs once per *pooled*
+            # element (the paper's operator reordering, monotone acts only
+            # — the planner guarantees it).
+            t = out.reshape(oh, ow, -1)
+            poh = (oh - pool_window) // pool_stride + 1
+            pow_ = (ow - pool_window) // pool_stride + 1
+            pooled = None
+            for dp in range(pool_window):
+                for dq in range(pool_window):
+                    sl = jax.lax.slice(
+                        t, (dp, dq, 0),
+                        (dp + (poh - 1) * pool_stride + 1,
+                         dq + (pow_ - 1) * pool_stride + 1, t.shape[-1]),
+                        (pool_stride, pool_stride, 1))
+                    pooled = sl if pooled is None else jnp.maximum(pooled, sl)
+            o_ref[...] = ref.apply_act(pooled, act).reshape(
+                1, poh, pow_, -1).astype(o_ref.dtype)
+        else:
+            o_ref[...] = ref.apply_act(out, act).reshape(
+                1, oh, ow, -1).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("stride", "act", "plan",
@@ -118,6 +142,12 @@ def sa_conv_implicit(x: jax.Array, f: jax.Array,
     ``interpret=True`` is the CPU validation mode; on a real TPU backend
     the same code lowers to Mosaic with the block shapes chosen by
     :func:`repro.core.dataflow.plan_conv`.
+
+    When ``plan.fuse_pool`` is set the flush epilogue additionally reduces
+    the ``plan.pool_window``/``plan.pool_stride`` maxpool windows over the
+    accumulator tile and the kernel returns the *pooled*
+    ``(batch, poh, pow, co)`` map — equal (bitwise, monotone acts) to
+    ``maxpool(act(conv(x)))`` without the full OFM ever touching HBM.
     """
     batch, h, w, ci = x.shape
     p, q, ci2, co = f.shape
@@ -129,6 +159,10 @@ def sa_conv_implicit(x: jax.Array, f: jax.Array,
         plan = plan_conv(batch, h, w, ci, p, q, co, stride=stride,
                          bytes_in=x.dtype.itemsize,
                          bytes_w=f.dtype.itemsize)
+    ooh, oow = oh, ow                              # emitted block dims
+    if plan.fuse_pool:
+        ooh = (oh - plan.pool_window) // plan.pool_stride + 1
+        oow = (ow - plan.pool_window) // plan.pool_stride + 1
     bi, bj = plan.bi, plan.bj
     gi, gj = pl.cdiv(ci, bi), pl.cdiv(co, bj)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, gi * bi - ci))) \
@@ -156,12 +190,15 @@ def sa_conv_implicit(x: jax.Array, f: jax.Array,
     out = pl.pallas_call(
         functools.partial(_implicit_conv_kernel, stride=stride, oh=oh, ow=ow,
                           act=act, has_bias=has_bias, has_scale=has_scale,
-                          fuse_taps=plan.fuse_taps),
+                          fuse_taps=plan.fuse_taps,
+                          pool_window=plan.pool_window if plan.fuse_pool
+                          else 0,
+                          pool_stride=plan.pool_stride),
         grid=(batch, gj, gi),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, oh, ow, bj),
+        out_specs=pl.BlockSpec((1, ooh, oow, bj),
                                lambda n_, j, k_: (n_, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((batch, oh, ow, gj * bj), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((batch, ooh, oow, gj * bj), out_dtype),
         scratch_shapes=[pltpu.VMEM((oh * ow, bj), jnp.float32)],
         compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

@@ -4,8 +4,9 @@ Layer tables match the originals exactly (they reproduce the paper's
 Table I MAC/weight counts; asserted in tests/test_perf_model.py).  The
 forward pass runs every CONV on the SA-CONV dataflow (implicit GEMM —
 patch extraction inside the kernel, no materialized im2col), every FC on
-SA-FC when memory-bound, and every pool through the fused
-MaxPool->activation unit — i.e. the complete MPNA operator set.
+SA-FC when memory-bound, and every conv+maxpool pair as one fused dispatch
+whose pooling-&-activation stage rides the accumulator-flush epilogue —
+i.e. the complete MPNA operator set with the Fig. 7 pipeline intact.
 """
 from __future__ import annotations
 
@@ -16,8 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.kernels import ref
-from repro.kernels.pool_act import maxpool_act
+from repro.core.dataflow import PoolSpec
 from repro.models.layers import dense_init
 
 
@@ -158,29 +158,42 @@ def cnn_forward(name: str, params: list, x: jax.Array, *,
     ``eng.conv2d`` — the implicit-GEMM SA-CONV kernel on the pallas
     backend (no materialized im2col patch matrix), planned/traced like
     every other op and resolvable from a compiled
-    :meth:`~repro.core.schedule.LayerSchedule.compile_cnn` schedule."""
+    :meth:`~repro.core.schedule.LayerSchedule.compile_cnn` schedule.
+
+    Each conv immediately followed by a maxpool is dispatched as ONE fused
+    conv+pool op (``pool=PoolSpec(...)``): when the plan accepts, the pool
+    rides the SA-CONV accumulator-flush epilogue and the full OFM never
+    reaches HBM (the paper's Fig. 7 pipeline); when the plan declines the
+    engine itself falls back to conv + standalone pool.  Pools not
+    preceded by a conv dispatch through ``eng.pool`` so they too appear in
+    the trace/schedule."""
     spec, _ = NETWORKS[name]
     if eng is None:
         eng = engine.current().with_(backend=backend, interpret=interpret)
-    use_pallas = eng.backend == "pallas"
-    interpret = eng.interpret
-    ci = fi = 0
-    for s, p in zip(spec, params):
+    ci = fi = pi = 0
+    i = 0
+    while i < len(spec):
+        s, p = spec[i], params[i]
         if s.kind == "conv":
             ci += 1
+            nxt = spec[i + 1] if i + 1 < len(spec) else None
+            if nxt is not None and nxt.kind == "pool":
+                x = eng.conv2d(x, p["f"], p["b"], stride=s.stride,
+                               pad=s.pad, act=s.act,
+                               pool=PoolSpec(nxt.kernel, nxt.stride),
+                               name=f"conv{ci}")
+                pi += 1
+                i += 2
+                continue
             x = eng.conv2d(x, p["f"], p["b"], stride=s.stride, pad=s.pad,
                            act=s.act, name=f"conv{ci}")
         elif s.kind == "pool":
-            if use_pallas:
-                # activation already applied by the conv epilogue; the fused
-                # unit applies act(maxpool(.)) which is a no-op repeat for
-                # monotone acts — kept to exercise the paper's unit.
-                x = maxpool_act(x, window=s.kernel, stride=s.stride,
-                                act="none", interpret=interpret)
-            else:
-                x = ref.maxpool2d(x, window=s.kernel, stride=s.stride)
+            pi += 1
+            x = eng.pool(x, window=s.kernel, stride=s.stride,
+                         name=f"pool{pi}")
         else:
             fi += 1
             x = x.reshape(x.shape[0], -1)
             x = eng.matmul(x, p["w"], p["b"], act=s.act, name=f"fc{fi}")
+        i += 1
     return x

@@ -216,11 +216,19 @@ def test_cnn_schedule_conv_entries_and_hits():
     convs = [r for r in tr if r.conv_plan is not None]
     assert len(convs) == 5
     assert all(r.schedule == "hit" for r in tr), tr.summary()
-    # executed tile shapes are the plan's (lookup returns the same object)
+    # the conv+pool pairs rode the fused epilogue (AlexNet: 3 pools)
+    assert sum(r.conv_plan.fuse_pool for r in convs) == 3
+    # executed tile shapes are the plan's (lookup returns the same object);
+    # the key carries the pool request so fused and plain convs of the same
+    # geometry cannot collide
+    from repro.core.dataflow import PoolSpec
     key = next(iter(sched.conv_entries))
+    pool = PoolSpec(key.pool_window, key.pool_stride) \
+        if key.pool_window else None
     assert sched.lookup_conv(key.name, key.batch, key.h, key.w, key.ci,
                              key.p, key.q, key.co, key.stride, key.dtype,
-                             key.weight_dtype) is sched.conv_entries[key]
+                             key.weight_dtype,
+                             pool=pool) is sched.conv_entries[key]
 
 
 def test_schedule_conv_traffic_matches_perf_model():
