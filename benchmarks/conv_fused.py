@@ -30,12 +30,15 @@ from __future__ import annotations
 
 import argparse
 import json
-import statistics
-import time
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks.timing import interleaved_medians
+except ImportError:                     # direct script execution
+    from timing import interleaved_medians
 
 Row = Tuple[str, float, str]
 
@@ -148,24 +151,14 @@ def _pair_fns(net: str, params, eng, x):
 
 
 def _ab_wall(fused_fn, unfused_fn, x, *, reps: int, trials: int) -> dict:
-    """Interleaved A/B medians: robust to the noisy-neighbour drift a CPU
-    container sees at millisecond scales."""
-    jax.block_until_ready(fused_fn(x))
-    jax.block_until_ready(unfused_fn(x))
-    tf, tu = [], []
-    for _ in range(trials):
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fused_fn(x)
-        jax.block_until_ready(out)
-        tf.append((time.perf_counter() - t0) / reps)
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = unfused_fn(x)
-        jax.block_until_ready(out)
-        tu.append((time.perf_counter() - t0) / reps)
-    mf, mu = statistics.median(tf), statistics.median(tu)
-    return {"fused": mf, "unfused": mu, "speedup": mu / mf}
+    """Interleaved A/B medians (benchmarks/timing.py — the shared
+    estimator): robust to the noisy-neighbour drift a CPU container sees
+    at millisecond scales."""
+    m = interleaved_medians({"fused": lambda: fused_fn(x),
+                             "unfused": lambda: unfused_fn(x)},
+                            reps=reps, trials=trials)
+    return {"fused": m["fused"], "unfused": m["unfused"],
+            "speedup": m["unfused"] / m["fused"]}
 
 
 def bench_net(net: str, width_mult: float, in_res: int, batch: int = 1,

@@ -14,17 +14,17 @@ from typing import List, Tuple
 import jax
 import jax.numpy as jnp
 
+try:                                    # package import (benchmarks.run)
+    from benchmarks.timing import median_wall_us
+except ImportError:                     # direct script execution
+    from timing import median_wall_us
+
 Row = Tuple[str, float, str]
 
 
 def _time(fn, *args, reps=5):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / reps * 1e6
+    """Median wall microseconds (benchmarks/timing.py shared estimator)."""
+    return median_wall_us(lambda: fn(*args), reps=reps, trials=3)
 
 
 def matmul_planner() -> List[Row]:

@@ -10,8 +10,8 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import conv_fused, kernel_bench, paper_figures, \
-        roofline_report
+    from benchmarks import conv_fused, fc_batch, kernel_bench, \
+        paper_figures, roofline_report
 
     groups = []
     groups += paper_figures.ALL
@@ -20,6 +20,9 @@ def main() -> None:
     # fused SA-CONV->maxpool epilogue: wall + planner bytes, fused vs
     # unfused — also writes the machine-readable BENCH_conv_fused.json
     groups += [conv_fused.bench_rows]
+    # batch-amortized SA-FC: weights-bytes/sample amortization curve +
+    # interleaved-median wall — writes BENCH_fc_batch.json
+    groups += [fc_batch.bench_rows]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,52 @@
+"""Shared wall-clock estimators for the benchmark suite.
+
+Wall-clock A/B on this CPU container is +-2x noisy at millisecond scale
+(noisy neighbours, interpret-mode Pallas): every benchmark therefore uses
+the same defensible estimator — **interleaved medians**.  All variants run
+inside every trial, back to back, so slow-neighbour drift hits each
+variant equally instead of biasing whichever happened to run during the
+quiet minute; the median over trials discards the outlier trials a mean
+would average in.
+
+    from benchmarks.timing import interleaved_medians, median_wall_us
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Callable, Dict, Mapping
+
+import jax
+
+
+def interleaved_medians(fns: Mapping[str, Callable[[], Any]], *,
+                        reps: int = 3, trials: int = 7,
+                        warmup: bool = True) -> Dict[str, float]:
+    """Median over ``trials`` of the per-call mean wall seconds for each
+    variant, with the variants interleaved inside every trial.
+
+    ``fns`` maps variant name -> nullary thunk returning a jax value (the
+    result is ``block_until_ready``-ed so async dispatch can't flatter a
+    variant).  ``warmup`` runs each thunk once first (compile time excluded
+    from every sample)."""
+    if warmup:
+        for fn in fns.values():
+            jax.block_until_ready(fn())
+    samples: Dict[str, list] = {name: [] for name in fns}
+    for _ in range(trials):
+        for name, fn in fns.items():
+            t0 = time.perf_counter()
+            out = None
+            for _ in range(reps):
+                out = fn()
+            jax.block_until_ready(out)
+            samples[name].append((time.perf_counter() - t0) / reps)
+    return {name: statistics.median(s) for name, s in samples.items()}
+
+
+def median_wall_us(fn: Callable[[], Any], *,
+                   reps: int = 5, trials: int = 3) -> float:
+    """Single-variant median wall microseconds per call (same estimator,
+    degenerate interleaving)."""
+    return interleaved_medians({"fn": fn}, reps=reps,
+                               trials=trials)["fn"] * 1e6

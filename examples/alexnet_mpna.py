@@ -6,12 +6,17 @@ workload running on the SA-CONV / SA-FC / pooling&activation kernels
 The forward runs under an explicit :class:`~repro.core.engine.Engine`
 carrying a compiled :meth:`LayerSchedule.compile_cnn` schedule — the
 paper's offline per-layer table: every CONV resolves its implicit-GEMM
-:class:`~repro.core.dataflow.ConvPlan` and every FC its
-:class:`~repro.core.dataflow.MatmulPlan` by lookup (``hit``), not by
+:class:`~repro.core.dataflow.ConvPlan` and every FC its batch-amortized
+:class:`~repro.core.dataflow.FCPlan` by lookup (``hit``), not by
 re-planning at trace time.  No im2col patch matrix is materialized.
 
     PYTHONPATH=src python examples/alexnet_mpna.py
+
+CI smoke (the full-resolution forward is >280 s on a CPU runner):
+
+    PYTHONPATH=src python examples/alexnet_mpna.py --res 67 --batch 1
 """
+import argparse
 import time
 
 import jax
@@ -24,13 +29,24 @@ from repro.core.schedule import LayerSchedule
 from repro.models import cnn
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--res", type=int, default=227,
+                    help="input resolution of the full-width CONV-stack "
+                         "section (227 = paper; 67 is the smallest AlexNet "
+                         "supports and makes a seconds-scale CI smoke)")
+    ap.add_argument("--batch", type=int, default=2,
+                    help="batch of the reduced functional demo + serving "
+                         "section")
+    args = ap.parse_args(argv)
+
     print("== functional: AlexNet on the MPNA kernels (reduced size) ==")
     params = cnn.init_cnn("alexnet", jax.random.PRNGKey(0), in_res=67,
                           width_mult=0.125)
-    x = jax.random.normal(jax.random.PRNGKey(1), (2, 67, 67, 3), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (args.batch, 67, 67, 3),
+                          jnp.float32)
 
-    sched = LayerSchedule.compile_cnn("alexnet", batch=2, in_res=67,
+    sched = LayerSchedule.compile_cnn("alexnet", batch=args.batch, in_res=67,
                                       width_mult=0.125)
     eng = Engine(backend="pallas", interpret=True).with_schedule(sched)
     with eng.tracing() as tr:
@@ -77,11 +93,11 @@ def main() -> None:
     print(f"  forward wall time: implicit GEMM {t_new*1e3:.1f} ms vs "
           f"im2col path {t_old*1e3:.1f} ms ({t_old/t_new:.1f}x)")
 
-    print("\n== full-size CONV stack (227x227, the layers this kernel owns) "
-          "==")
-    full = cnn.init_cnn("alexnet", jax.random.PRNGKey(0))
-    xf = jax.random.normal(jax.random.PRNGKey(2), (1, 227, 227, 3),
-                           jnp.float32)
+    print(f"\n== full-width CONV stack ({args.res}x{args.res}, the layers "
+          "this kernel owns) ==")
+    full = cnn.init_cnn("alexnet", jax.random.PRNGKey(0), in_res=args.res)
+    xf = jax.random.normal(jax.random.PRNGKey(2),
+                           (1, args.res, args.res, 3), jnp.float32)
     spec, _ = cnn.NETWORKS["alexnet"]
 
     def conv_stack(fn_conv, xv):
@@ -129,6 +145,44 @@ def main() -> None:
               f"(compulsory {row.compulsory_bytes/2**20:6.1f}, "
               f"im2col path moved {row.im2col_bytes/2**20:6.1f}) "
               f"case {p.case} tile (bi={p.bi}, bj={p.bj}){pooltag}")
+
+    print("\n== batch-amortized SA-FC: the classifier head's weight stream "
+          "==")
+    print("   (per-sample FC weight reuse = 1 — the only traffic lever is")
+    print("    the batch: each weight byte streams once per resident batch")
+    print("    tile, so weights-bytes/sample falls ~B-fold)")
+    for b in (1, 16, 64, 256):
+        rows = PM.pallas_fc_traffic("alexnet", batch=b)
+        stack = sum(r.weight_bytes_per_sample for r in rows)
+        tags = " ".join(f"{r.layer}:bb={r.plan.bb}x{r.plan.weight_passes}p"
+                        for r in rows)
+        print(f"  b={b:4d}: {stack / 2**20:7.2f} MiB weights/sample  {tags}")
+    flips = {r.layer: r.plan.flip_batch
+             for r in PM.pallas_fc_traffic("alexnet", batch=1)}
+    print(f"  planner-pinned memory-bound flip batches: {flips}")
+
+    print("\n== micro-batch CNN serving (the batching that buys the "
+          "amortization) ==")
+    from repro.serve.cnn_server import CNNRequest, CNNServer
+    srv = CNNServer("alexnet", params, in_res=67, width_mult=0.125,
+                    max_batch=8)
+    rng = np.random.default_rng(0)
+    n_req = max(3, args.batch)
+    for i in range(n_req):
+        srv.submit(CNNRequest(uid=i, image=rng.standard_normal(
+            (67, 67, 3)).astype(np.float32)))
+    done = srv.run()
+    wave = srv.waves[0]
+    print(f"  {n_req} single-image requests -> {len(srv.waves)} dispatch "
+          f"wave(s), micro-batch {srv.microbatch} "
+          f"(planner's resident batch tile)")
+    print(f"  wave 0: batch {wave.batch}, {wave.schedule_hits} schedule "
+          f"hits, FC layers carry FCPlans: "
+          f"{[(r.name, r.fc_plan.bb) for r in wave.fc_records]}")
+    one = cnn.cnn_forward("alexnet", params,
+                          jnp.asarray(done[0].image)[None], eng=eng)
+    print(f"  bitwise-equal to the unbatched forward: "
+          f"{bool(np.array_equal(np.asarray(one)[0], done[0].logits))}")
 
     print("\n== analytic: the paper's headline numbers ==")
     print(f"  Fig 12a  SA-FC speedup on FC : "

@@ -43,7 +43,7 @@ def main() -> None:
                      microbatch=max(1, args.batch // 2), remat="block",
                      grad_compress="none")
     report = trainer.run(cfg, tc, ckpt_dir=args.ckpt_dir, ckpt_every=100,
-                         log_every=10)
+                         log_every=min(10, max(1, args.steps - 1)))
     print(f"[train_lm] done: loss {report.losses[0]:.3f} -> "
           f"{report.final_loss:.3f} over {report.steps_run} steps "
           f"(resumed_from={report.resumed_from})")

@@ -232,6 +232,195 @@ def compulsory_bytes(m: int, n: int, k: int,
 
 
 # ---------------------------------------------------------------------------
+# FC planning — the batch-amortized SA-FC weight stream (paper Fig. 7D/8)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FCPlan:
+    """Batch-tiled weight-streaming decision for one ``(b,k) @ (k,n)`` FC
+    layer on the SA-FC array.
+
+    Per-sample FC weight reuse is 1 (paper Sec. V-A), so the only lever on
+    the dominant ``k*n`` weight stream is *batch amortization*: keep a
+    ``(bb, bk)`` activation tile and a ``(bb, bn)`` fp32 accumulator
+    resident and stream each weight tile once per **batch tile**, not once
+    per sample.  Total weight traffic is therefore
+
+        weight_hbm_bytes = ceil(b_padded / bb) * k_p * n_p * bytes_w
+
+    and the planner's whole job is to pick the largest resident batch tile
+    the VMEM budget allows (``weight_passes`` == 1 recovers the paper's
+    "fetch the weights once only" for the entire micro-batch).
+
+    ``flip_batch`` is the planner-pinned serving batch at which the op's
+    compulsory arithmetic intensity (~``2*b`` FLOP/byte while the weight
+    stream dominates) crosses the chip ridge and the layer stops being
+    memory-bound — the batch where :func:`classify_regime` flips the
+    layer from SA-FC to SA-CONV (0: no finite batch flips it).
+
+    Case mapping (buffer-fit scenario analog):
+
+    * 1 — whole problem resident, every byte once;
+    * 2 — whole batch resident (``gb == 1``): weights stream exactly once;
+    * 3 — one output-column pass (``gn == 1``), batch tiled;
+    * 4 — fully tiled.
+    """
+    case: int                       # 1..4 (see above)
+    regime: str                     # 'sa_fc' | 'sa_conv' (policy-forced)
+    bb: int                         # resident batch tile (rows per pass)
+    bn: int
+    bk: int
+    hbm_bytes: int                  # analytic HBM bytes under this tiling
+    flops: int
+    vmem_bytes: int                 # working set (incl. double buffers)
+    b: int
+    n: int
+    k: int
+    weight_hbm_bytes: int           # the streamed k*n term, all passes
+    flip_batch: int                 # memory-bound -> compute-bound batch
+
+    @property
+    def arithmetic_intensity(self) -> float:
+        return self.flops / max(1, self.hbm_bytes)
+
+    @property
+    def weight_passes(self) -> int:
+        """How many times the full weight matrix crosses HBM."""
+        return math.ceil(_round_up(max(self.b, 1), SUBLANE) / self.bb)
+
+    @property
+    def weight_bytes_per_sample(self) -> float:
+        """The amortization headline: streamed weight bytes per sample."""
+        return self.weight_hbm_bytes / max(1, self.b)
+
+    def grid(self, b: int, n: int, k: int) -> Tuple[int, int, int]:
+        return (math.ceil(_round_up(max(b, 1), SUBLANE) / self.bb),
+                math.ceil(n / self.bn), math.ceil(k / self.bk))
+
+
+def fc_vmem_bytes(bb: int, bn: int, bk: int, *,
+                  bytes_in: int, bytes_w: int,
+                  bytes_out: int = 4) -> int:
+    """Resident working set of the batch-tiled SA-FC kernel: the
+    double-buffered activation and streamed-weight tiles (the per-PE
+    'parallel weight movement' register), the fp32 accumulator SPM, and
+    the output tile the flush epilogue writes.  Single source of truth —
+    :func:`plan_fc` budgets with it and
+    :func:`repro.kernels.sa_fc.sa_fc_matmul` asserts against it, so a
+    block that could never be resident on the modeled hardware cannot be
+    requested silently."""
+    return (2 * (bb * bk * bytes_in + bk * bn * bytes_w)
+            + bb * bn * (4 + bytes_out))
+
+
+def fc_flip_batch(n: int, k: int, *,
+                  bytes_in: int = 2, bytes_out: int = 4,
+                  bytes_w: int | None = None,
+                  chip: TPUChip = TPU_V5E) -> int:
+    """Smallest batch ``b`` at which a ``(b,k) @ (k,n)`` FC layer's
+    compulsory intensity reaches the chip ridge — i.e. where
+    :func:`classify_regime` flips the layer off the memory-bound SA-FC
+    array.  Closed form of ``2*b*n*k / (b*k*bi + k*n*bw + b*n*bo) >= R``;
+    returns 0 when no finite batch flips it (the per-sample activation and
+    output streams alone already exceed the compute)."""
+    bw = bytes_w if bytes_w is not None else bytes_in
+    r = chip.ridge_flops_per_byte
+    denom = 2 * n * k - r * (k * bytes_in + n * bytes_out)
+    if denom <= 0:
+        return 0
+    return max(1, math.ceil(r * k * n * bw / denom))
+
+
+def _fc_tiles(d: int, unit: int) -> list[int]:
+    """Aligned candidate tiles <= MAX_TILE plus the exact (padded) extent."""
+    out = {min(d, MAX_TILE)}
+    t = unit
+    while t < d and t < MAX_TILE:
+        out.add(t)
+        t *= 2
+    return sorted(out)
+
+
+def plan_fc(b: int, n: int, k: int, *,
+            bytes_in: int = 2,
+            bytes_out: int = 4,
+            bytes_w: int | None = None,
+            vmem_budget: int | None = None,
+            chip: TPUChip = TPU_V5E,
+            regime: str | None = None) -> FCPlan:
+    """Pick the batch/weight tiling for a ``(b,k) @ (k,n)`` FC layer.
+
+    Traffic model for grid ``(gb, gn, gk)`` — batch outermost, K innermost
+    so the ``(bb, bn)`` accumulator never spills:
+
+        x bytes = b*k*bytes_in * gn     (activation tile re-read per N tile)
+        w bytes = k*n*bytes_w  * gb     (weights re-streamed once per BATCH
+                                         TILE — the amortization lever)
+        o bytes = b*n*bytes_out         (written once)
+
+    The min-traffic feasible tiling under ``vmem_budget`` wins (ties prefer
+    the structurally nicer case, then the larger batch tile).  Because the
+    weight term dominates every memory-bound FC layer, this maximizes the
+    resident batch tile — the paper's batch amortization — without a
+    special-cased objective."""
+    budget = vmem_budget if vmem_budget is not None else chip.vmem_budget
+    bw = bytes_w if bytes_w is not None else bytes_in
+    if regime is None:
+        regime = classify_regime(b, n, k, bytes_in, chip, bytes_w=bw,
+                                 bytes_out=bytes_out)
+
+    bp = _round_up(max(b, 1), SUBLANE)
+    np_ = _round_up(n, LANE)
+    kp = _round_up(k, LANE)
+
+    def vmem(bb: int, bn: int, bk: int) -> int:
+        return fc_vmem_bytes(bb, bn, bk, bytes_in=bytes_in, bytes_w=bw,
+                             bytes_out=bytes_out)
+
+    def grids(bb: int, bn: int, bk: int) -> Tuple[int, int, int]:
+        return (math.ceil(bp / bb), math.ceil(np_ / bn),
+                math.ceil(kp / bk))
+
+    def w_bytes(bb: int) -> int:
+        return kp * np_ * bw * math.ceil(bp / bb)
+
+    def traffic(bb: int, bn: int, bk: int) -> int:
+        gb, gn, gk = grids(bb, bn, bk)
+        return bp * kp * bytes_in * gn + w_bytes(bb) + bp * np_ * bytes_out
+
+    def case(bb: int, bn: int, bk: int) -> int:
+        gb, gn, gk = grids(bb, bn, bk)
+        if gb == gn == gk == 1:
+            return 1
+        if gb == 1:
+            return 2                 # batch resident: weights once, total
+        if gn == 1:
+            return 3
+        return 4
+
+    best = None
+    for bb in _fc_tiles(bp, SUBLANE):
+        for bn in _fc_tiles(np_, LANE):
+            for bk in _fc_tiles(kp, LANE):
+                if vmem(bb, bn, bk) > budget:
+                    continue
+                key = (traffic(bb, bn, bk), case(bb, bn, bk), -bb,
+                       -(bn * bk))
+                if best is None or key < best[0]:
+                    best = (key, bb, bn, bk)
+    assert best is not None, \
+        f"VMEM budget {budget} too small for the minimum SA-FC tile " \
+        f"({fc_vmem_bytes(SUBLANE, LANE, LANE, bytes_in=bytes_in, bytes_w=bw, bytes_out=bytes_out)} bytes)"
+    _, bb, bn, bk = best
+    return FCPlan(case(bb, bn, bk), regime, bb, bn, bk,
+                  hbm_bytes=traffic(bb, bn, bk), flops=2 * b * n * k,
+                  vmem_bytes=vmem(bb, bn, bk), b=b, n=n, k=k,
+                  weight_hbm_bytes=w_bytes(bb),
+                  flip_batch=fc_flip_batch(n, k, bytes_in=bytes_in,
+                                           bytes_out=bytes_out, bytes_w=bw,
+                                           chip=chip))
+
+
+# ---------------------------------------------------------------------------
 # CONV planning — the implicit-GEMM SA-CONV schedule (paper Fig. 5 loop nest)
 # ---------------------------------------------------------------------------
 #: Patch-tile element cap for the kernel's fused-tap mode: up to this many

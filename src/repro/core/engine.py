@@ -50,7 +50,7 @@ import jax.numpy as jnp
 
 from repro.core import dataflow
 from repro.core.accelerator import TPU_V5E, TPUChip
-from repro.core.dataflow import ConvPlan, MatmulPlan, PoolSpec
+from repro.core.dataflow import ConvPlan, FCPlan, MatmulPlan, PoolSpec
 from repro.kernels import ref
 from repro.kernels.pool_act import maxpool_act
 from repro.kernels.sa_conv import sa_conv_matmul
@@ -76,6 +76,10 @@ class DispatchRecord:
     weight_dtype: str = ""      # 'int8' for QTensor weights
     schedule: str = ""          # 'hit' | 'miss' | '' (no schedule attached)
     plan: Optional[MatmulPlan] = None
+    # FC dispatches routed to the batch-amortized SA-FC dataflow carry the
+    # batch-tiled plan (weight stream charged once per batch tile) instead
+    # of a MatmulPlan
+    fc_plan: Optional[FCPlan] = None
     # CONV dispatches: the conv plan plus the layer geometry
     # (batch, h, w, ci, p, q, co, stride) — h/w are the padded input dims.
     conv_plan: Optional[ConvPlan] = None
@@ -131,6 +135,9 @@ class DispatchTrace:
                          f"s{r.conv_plan.pool_stride}")
             elif r.pool is not None and r.conv_plan is not None:
                 fused = " pool-declined"
+            elif r.fc_plan is not None:
+                fused = (f" bb={r.fc_plan.bb}"
+                         f" wx{r.fc_plan.weight_passes}")
             lines.append(f"{r.name:24s} {r.regime:9s} case={r.case} "
                          f"({r.m}x{r.k})@({r.k}x{r.n}) "
                          f"w={r.weight_dtype or '-'} "
@@ -182,6 +189,25 @@ class DispatchPolicy:
                             weight_bytes if weight_bytes is not None
                             else act_bytes, regime)
 
+    def plan_fc(self, b: int, n: int, k: int, *, act_bytes: int,
+                weight_bytes: Optional[int] = None,
+                regime: Optional[str] = None) -> FCPlan:
+        """Batch-amortized SA-FC planning under this policy's chip/VMEM
+        budget — the FC twin of :meth:`plan`: the resident batch tile is
+        the weight-amortization lever, the weight stream is charged once
+        per batch tile, and the memory-bound -> compute-bound flip batch
+        is a plan output (:attr:`~repro.core.dataflow.FCPlan.flip_batch`).
+        """
+        return _cached_fc_plan(self, b, n, k, act_bytes,
+                               weight_bytes if weight_bytes is not None
+                               else act_bytes, regime)
+
+    @property
+    def effective_vmem_budget(self) -> int:
+        """The on-chip allowance every plan under this policy honors."""
+        return self.vmem_budget if self.vmem_budget is not None \
+            else self.chip.vmem_budget
+
     def conv_regime_for(self, name: str, batch: int, h: int, w: int,
                         ci: int, p: int, q: int, co: int, stride: int, *,
                         act_bytes: int,
@@ -226,6 +252,15 @@ def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
 
 
 @functools.lru_cache(maxsize=4096)
+def _cached_fc_plan(policy: DispatchPolicy, b: int, n: int, k: int,
+                    act_bytes: int, weight_bytes: int,
+                    regime: Optional[str]) -> FCPlan:
+    return dataflow.plan_fc(
+        b, n, k, bytes_in=act_bytes, bytes_w=weight_bytes,
+        vmem_budget=policy.vmem_budget, chip=policy.chip, regime=regime)
+
+
+@functools.lru_cache(maxsize=4096)
 def _cached_conv_plan(policy: DispatchPolicy, batch: int, h: int, w: int,
                       ci: int, p: int, q: int, co: int, stride: int,
                       act_bytes: int, weight_bytes: int,
@@ -244,19 +279,37 @@ def _cached_conv_plan(policy: DispatchPolicy, batch: int, h: int, w: int,
 # zero-bias argument and no fabricated scalar tangent.
 # ---------------------------------------------------------------------------
 def _pallas_matmul(x2d, w, bias, act, regime, interpret, *,
-                   plan=None, w_scale=None, out_dtype=None):
+                   plan=None, w_scale=None, out_dtype=None,
+                   vmem_limit=None):
     if regime == "sa_fc":
-        bn = bk = 512
-        if plan is not None:
+        bb, bn, bk = None, 512, 512
+        if isinstance(plan, FCPlan):
             # planner tiles are pre-capped at dataflow.MAX_TILE: executed
-            # block shapes equal the plan's (no silent clamp drift)
+            # block shapes equal the plan's (no silent clamp drift), and
+            # the resident batch tile is the plan's amortization decision
+            bb, bn, bk = plan.bb, plan.bn, plan.bk
+        elif plan is not None:
             bn, bk = plan.bn, plan.bk
-        return sa_fc_matmul(x2d, w, bias, act=act, bn=bn, bk=bk,
+        return sa_fc_matmul(x2d, w, bias, act=act, bb=bb, bn=bn, bk=bk,
                             w_scale=w_scale, out_dtype=out_dtype,
-                            interpret=interpret)
+                            vmem_limit=vmem_limit, interpret=interpret)
+    if isinstance(plan, FCPlan):
+        plan = None                  # sa_conv kernel plans its own tiling
     return sa_conv_matmul(x2d, w, bias, act=act, plan=plan,
                           w_scale=w_scale, out_dtype=out_dtype,
                           interpret=interpret)
+
+
+def _fc_dx_plan(b, n_out, k_con, x_dtype, w_dtype, vmem_limit):
+    """Batch-tiled plan for the backward ``dx = g @ w^T`` stream: the
+    transposed weight matrix is re-streamed once per resident batch tile
+    under the same modeled VMEM budget as the forward, so the residency
+    invariant (no block that could never be on-chip) holds for both
+    passes — not just the forward."""
+    return dataflow.plan_fc(b, n_out, k_con,
+                            bytes_in=jnp.dtype(x_dtype).itemsize,
+                            bytes_w=jnp.dtype(w_dtype).itemsize,
+                            vmem_budget=vmem_limit, regime="sa_fc")
 
 
 def _act_grad(pre, act):
@@ -269,12 +322,19 @@ def _act_grad(pre, act):
 @functools.lru_cache(maxsize=256)
 def _make_pallas_vjp(act: str, regime: str, interpret: bool,
                      has_bias: bool, out_dtype,
-                     plan: Optional[MatmulPlan]):
+                     plan, vmem_limit: Optional[int] = None):
     def _bwd_core(x2d, w, bias, g):
         pre = _pallas_matmul(x2d, w, bias, "none", regime, interpret,
-                             plan=plan).astype(jnp.float32)
+                             plan=plan,
+                             vmem_limit=vmem_limit).astype(jnp.float32)
         dpre = (g.astype(jnp.float32) * _act_grad(pre, act)).astype(x2d.dtype)
-        dx = _pallas_matmul(dpre, w.T, None, "none", regime, interpret)
+        dx_plan = None
+        if regime == "sa_fc":
+            # dx = dpre (b, n) @ w.T (n, k): plan the transposed stream
+            dx_plan = _fc_dx_plan(x2d.shape[0], w.shape[0], w.shape[1],
+                                  x2d.dtype, w.dtype, vmem_limit)
+        dx = _pallas_matmul(dpre, w.T, None, "none", regime, interpret,
+                            plan=dx_plan, vmem_limit=vmem_limit)
         dw = _pallas_matmul(x2d.T, dpre, None, "none", "sa_conv", interpret)
         return dpre, dx, dw.astype(w.dtype)
 
@@ -282,7 +342,8 @@ def _make_pallas_vjp(act: str, regime: str, interpret: bool,
         @jax.custom_vjp
         def f(x2d, w, bias):
             return _pallas_matmul(x2d, w, bias, act, regime, interpret,
-                                  plan=plan, out_dtype=out_dtype)
+                                  plan=plan, out_dtype=out_dtype,
+                                  vmem_limit=vmem_limit)
 
         def fwd(x2d, w, bias):
             return f(x2d, w, bias), (x2d, w, bias)
@@ -296,7 +357,8 @@ def _make_pallas_vjp(act: str, regime: str, interpret: bool,
         @jax.custom_vjp
         def f(x2d, w):
             return _pallas_matmul(x2d, w, None, act, regime, interpret,
-                                  plan=plan, out_dtype=out_dtype)
+                                  plan=plan, out_dtype=out_dtype,
+                                  vmem_limit=vmem_limit)
 
         def fwd(x2d, w):
             return f(x2d, w), (x2d, w)
@@ -311,7 +373,7 @@ def _make_pallas_vjp(act: str, regime: str, interpret: bool,
 
 
 def _quantized_pallas_matmul(x2d, wq, w_scale, bias, act, regime, interpret,
-                             plan, out_dtype):
+                             plan, out_dtype, vmem_limit=None):
     """Quantized pallas matmul, differentiable in ``x`` (and ``bias``).
 
     The int8 weights + scale are closed over as constants: no weight
@@ -323,13 +385,14 @@ def _quantized_pallas_matmul(x2d, wq, w_scale, bias, act, regime, interpret,
 
     def pre_fn(xv, bv):
         return _pallas_matmul(xv, wq, bv, "none", regime, interpret,
-                              plan=plan, w_scale=w_scale)
+                              plan=plan, w_scale=w_scale,
+                              vmem_limit=vmem_limit)
 
     @jax.custom_vjp
     def f(xv, bv):
         return _pallas_matmul(xv, wq, bv if has_bias else None, act, regime,
                               interpret, plan=plan, w_scale=w_scale,
-                              out_dtype=out_dtype)
+                              out_dtype=out_dtype, vmem_limit=vmem_limit)
 
     def fwd(xv, bv):
         return f(xv, bv), (xv, bv)
@@ -341,7 +404,12 @@ def _quantized_pallas_matmul(x2d, wq, w_scale, bias, act, regime, interpret,
         # fold the per-output-channel scale into the cotangent, then dot
         # against the raw int8 transpose (widened on-chip by the kernel)
         dscaled = (dpre * w_scale.astype(jnp.float32)).astype(xv.dtype)
-        dx = _pallas_matmul(dscaled, wq.T, None, "none", regime, interpret)
+        dx_plan = None
+        if regime == "sa_fc":
+            dx_plan = _fc_dx_plan(xv.shape[0], wq.shape[0], wq.shape[1],
+                                  xv.dtype, wq.dtype, vmem_limit)
+        dx = _pallas_matmul(dscaled, wq.T, None, "none", regime, interpret,
+                            plan=dx_plan, vmem_limit=vmem_limit)
         if has_bias:
             db = jnp.sum(dpre, axis=0).astype(bv.dtype)
             return dx, db
@@ -461,9 +529,12 @@ class Engine:
 
     # -- planning -----------------------------------------------------------
     def plan_for(self, name: str, m: int, n: int, k: int, *,
-                 dtype, weight_dtype) -> Tuple[MatmulPlan, str]:
+                 dtype, weight_dtype) -> Tuple[Any, str]:
         """(plan, 'hit'|'miss'|'') for one named op — schedule lookup with
-        policy fallback."""
+        policy fallback.  Ops assigned to the SA-FC array get a
+        batch-amortized :class:`~repro.core.dataflow.FCPlan` (the resident
+        batch tile is the weight-amortization lever); SA-CONV ops get a
+        :class:`~repro.core.dataflow.MatmulPlan` as before."""
         act_bytes = jnp.dtype(dtype).itemsize
         w_bytes = jnp.dtype(weight_dtype).itemsize
         state = ""
@@ -475,8 +546,12 @@ class Engine:
             state = "miss"
         regime = self.policy.regime_for(name, m, n, k, act_bytes=act_bytes,
                                         weight_bytes=w_bytes)
-        plan = self.policy.plan(m, n, k, act_bytes=act_bytes,
-                                weight_bytes=w_bytes, regime=regime)
+        if regime == "sa_fc":
+            plan = self.policy.plan_fc(m, n, k, act_bytes=act_bytes,
+                                       weight_bytes=w_bytes, regime=regime)
+        else:
+            plan = self.policy.plan(m, n, k, act_bytes=act_bytes,
+                                    weight_bytes=w_bytes, regime=regime)
         return plan, state
 
     def plan_conv_for(self, name: str, batch: int, h: int, w: int, ci: int,
@@ -532,26 +607,29 @@ class Engine:
             m *= s
         plan, sched = self.plan_for(name, m, n, k, dtype=x.dtype,
                                     weight_dtype=wq.dtype)
+        is_fc = isinstance(plan, dataflow.FCPlan)
         self._record(name=name, regime=plan.regime, m=m, n=n, k=k,
                      case=plan.case, backend=self.backend,
                      dtype=str(x.dtype), weight_dtype=str(wq.dtype),
-                     schedule=sched, plan=plan)
+                     schedule=sched, plan=None if is_fc else plan,
+                     fc_plan=plan if is_fc else None)
 
         x2d = x.reshape(m, k)
         out_dt = jnp.dtype(out_dtype) if out_dtype is not None else x.dtype
         if self.backend == "pallas":
+            vmem_limit = self.policy.effective_vmem_budget if is_fc else None
             if w_scale is not None:
                 # frozen quantized weights: differentiable in x/bias only
                 out = _quantized_pallas_matmul(x2d, wq, w_scale, bias, act,
                                                plan.regime, self.interpret,
-                                               plan, out_dt)
+                                               plan, out_dt, vmem_limit)
             elif bias is not None:
                 fn = _make_pallas_vjp(act, plan.regime, self.interpret,
-                                      True, out_dt, plan)
+                                      True, out_dt, plan, vmem_limit)
                 out = fn(x2d, wq, bias)
             else:
                 fn = _make_pallas_vjp(act, plan.regime, self.interpret,
-                                      False, out_dt, plan)
+                                      False, out_dt, plan, vmem_limit)
                 out = fn(x2d, wq)
         else:
             out = ref.matmul_bias_act(x2d, wq, bias, act=act,

@@ -45,8 +45,9 @@ from typing import Iterable, List, Optional
 
 from repro.core.accelerator import ENERGY_PJ, MPNA_PAPER, MPNAConfig, \
     SystolicArray, TPU_V5E, TPUChip
-from repro.core.dataflow import (ConvPlan, PoolSpec, compulsory_conv_bytes,
-                                 im2col_bytes, plan_conv,
+from repro.core.dataflow import (ConvPlan, FCPlan, PoolSpec,
+                                 compulsory_bytes, compulsory_conv_bytes,
+                                 im2col_bytes, plan_conv, plan_fc,
                                  pool_roundtrip_bytes)
 from repro.models.cnn import LayerStats, network_stats
 
@@ -376,6 +377,62 @@ def pallas_conv_traffic(net: str, *, batch: int = 1,
             im2col_bytes(batch, hp, hp, ch, s.kernel, s.kernel, s.out_ch,
                          **kw),
             pool=pool, unfused_bytes=unfused))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TPU-side FC traffic: what the batch-amortized SA-FC schedule commits to,
+# layer by layer — the FC twin of pallas_conv_traffic above.  Per-sample FC
+# weight reuse is 1 (Sec. V-A), so the only traffic lever is the batch: the
+# planner streams each weight byte once per resident batch tile and the
+# weights-bytes/sample column is the amortization headline
+# benchmarks/fc_batch.py plots.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FCLayerTraffic:
+    layer: str
+    plan: FCPlan                   # the batch-tiled plan the schedule runs
+    compulsory_bytes: int          # every operand byte exactly once at this
+    #                                batch (weights once TOTAL, not per tile)
+    weight_hbm_bytes: int          # plan's streamed weight term, all passes
+    compulsory_weight_bytes: int   # k*n*bytes_w — one full stream
+
+    @property
+    def weight_bytes_per_sample(self) -> float:
+        """Planner weight stream amortized over the batch."""
+        return self.weight_hbm_bytes / max(1, self.plan.b)
+
+    @property
+    def compulsory_weight_bytes_per_sample(self) -> float:
+        return self.compulsory_weight_bytes / max(1, self.plan.b)
+
+
+def pallas_fc_traffic(net: str, *, batch: int = 1,
+                      in_res: Optional[int] = None, in_ch: int = 3,
+                      bytes_in: int = 4, bytes_w: Optional[int] = None,
+                      bytes_out: int = 4,
+                      chip: TPUChip = TPU_V5E,
+                      vmem_budget: Optional[int] = None
+                      ) -> List[FCLayerTraffic]:
+    """Per-FC-layer analytic HBM traffic of the batch-amortized SA-FC path
+    for a CNN's classifier head at serving batch ``batch``: planner bytes
+    (weight stream charged once per resident batch tile) vs. the
+    compulsory minimum (every byte once).  Layer geometry comes from
+    :func:`repro.models.cnn.network_stats` — the same single source of
+    truth :func:`pallas_conv_traffic` reads."""
+    bw = bytes_w if bytes_w is not None else bytes_in
+    out: List[FCLayerTraffic] = []
+    for l in network_stats(net, in_res=in_res, in_ch=in_ch):
+        if l.kind != "fc":
+            continue
+        k, n = l.ifm[2], l.ofm[2]
+        plan = plan_fc(batch, n, k, bytes_in=bytes_in, bytes_w=bw,
+                       bytes_out=bytes_out, vmem_budget=vmem_budget,
+                       chip=chip)
+        out.append(FCLayerTraffic(
+            l.name, plan,
+            compulsory_bytes(batch, n, k, bytes_in, bytes_out, bw),
+            plan.weight_hbm_bytes, k * n * bw))
     return out
 
 

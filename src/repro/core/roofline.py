@@ -512,6 +512,36 @@ def fused_pool_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def fc_batch_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
+    """Per-FC-entry batch-amortization accounting from a compiled schedule:
+    for every matmul entry the policy routed to the batch-amortized SA-FC
+    dataflow (an :class:`~repro.core.dataflow.FCPlan`), the planner's
+    streamed weight bytes per sample vs. the compulsory single full stream
+    (``k*n`` bytes) per sample, the number of weight passes the tiling
+    commits to, and the planner-pinned flip batch at which the layer would
+    stop being memory-bound.  The offline counterpart of the
+    ``BENCH_fc_batch.json`` headline curve."""
+    import numpy as _np
+
+    out: Dict[str, Dict[str, float]] = {}
+    for key, plan in schedule.items():
+        if not hasattr(plan, "bb"):          # MatmulPlan (sa_conv) entry
+            continue
+        bw = _np.dtype(key.weight_dtype).itemsize
+        b = max(1, key.m)
+        out[key.name] = {
+            "batch": float(key.m),
+            "batch_tile": float(plan.bb),
+            "weight_passes": float(plan.weight_passes),
+            "weight_bytes_per_sample": plan.weight_hbm_bytes / b,
+            "compulsory_weight_bytes_per_sample": key.k * key.n * bw / b,
+            "hbm_bytes": float(plan.hbm_bytes),
+            "amortized_intensity": float(plan.arithmetic_intensity),
+            "flip_batch": float(plan.flip_batch),
+        }
+    return out
+
+
 def model_flops_train(n_active_params: int, tokens: int) -> float:
     return 6.0 * n_active_params * tokens
 

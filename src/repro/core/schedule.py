@@ -30,7 +30,7 @@ from typing import Any, Dict, Iterator, Mapping, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.dataflow import ConvPlan, MatmulPlan
+from repro.core.dataflow import ConvPlan, FCPlan, MatmulPlan
 from repro.core.engine import DispatchPolicy, Engine
 
 PHASES = ("train", "prefill", "decode")
@@ -70,8 +70,12 @@ class ConvOpKey:
 
 
 class LayerSchedule(Mapping):
-    """Immutable compiled mapping ``OpKey -> MatmulPlan`` (plus
-    ``ConvOpKey -> ConvPlan`` for CONV layers) for one phase.
+    """Immutable compiled mapping ``OpKey -> MatmulPlan | FCPlan`` (plus
+    ``ConvOpKey -> ConvPlan`` for CONV layers) for one phase.  Ops the
+    policy assigns to the SA-FC array carry a batch-amortized
+    :class:`~repro.core.dataflow.FCPlan` (weight stream charged once per
+    resident batch tile); SA-CONV ops a
+    :class:`~repro.core.dataflow.MatmulPlan`.
 
     The Mapping protocol covers the matmul entries (back-compat);
     CONV entries are reached via :meth:`lookup_conv` /
@@ -151,6 +155,15 @@ class LayerSchedule(Mapping):
                 f"case {cplan.case} tile (bi={cplan.bi},bj={cplan.bj}) "
                 f"hbm {cplan.hbm_bytes / 2**20:.1f} MiB")
         for key, plan in self._entries.items():
+            if isinstance(plan, FCPlan):
+                lines.append(
+                    f"  {key.name:24s} ({key.m}x{key.k})@({key.k}x{key.n}) "
+                    f"w={key.weight_dtype:8s} -> {plan.regime:8s} "
+                    f"case {plan.case} "
+                    f"tile (bb={plan.bb},{plan.bn},{plan.bk}) "
+                    f"wstream x{plan.weight_passes} "
+                    f"hbm {plan.hbm_bytes / 2**20:.1f} MiB")
+                continue
             lines.append(
                 f"  {key.name:24s} ({key.m}x{key.k})@({key.k}x{key.n}) "
                 f"w={key.weight_dtype:8s} -> {plan.regime:8s} case {plan.case} "
@@ -208,8 +221,11 @@ class LayerSchedule(Mapping):
         :data:`repro.models.cnn.NETWORKS` — the paper's per-layer offline
         schedule (Sec. V) for its own workloads: every CONV gets a
         :class:`~repro.core.dataflow.ConvPlan` (implicit-GEMM tiling,
-        real NHWC traffic), every FC a
-        :class:`~repro.core.dataflow.MatmulPlan`.  An engine carrying the
+        real NHWC traffic), every FC a batch-amortized
+        :class:`~repro.core.dataflow.FCPlan` when the policy assigns it
+        to the SA-FC array (the classifier-head norm; a
+        :class:`~repro.core.dataflow.MatmulPlan` when forced to
+        SA-CONV).  An engine carrying the
         result resolves each layer by lookup (``schedule="hit"``) instead
         of re-planning at trace time."""
         if policy is None:
@@ -254,9 +270,11 @@ def _entries_from_trace(tr) -> Tuple[Dict[OpKey, MatmulPlan],
                                    pool.window if pool is not None else 0,
                                    pool.stride if pool is not None else 0)
                          ] = rec.conv_plan
-        elif rec.plan is not None and rec.regime in ("sa_conv", "sa_fc"):
+        elif rec.regime in ("sa_conv", "sa_fc") and \
+                (rec.plan is not None or rec.fc_plan is not None):
             entries[OpKey(rec.name, rec.m, rec.n, rec.k, rec.dtype,
-                          rec.weight_dtype)] = rec.plan
+                          rec.weight_dtype)] = \
+                rec.plan if rec.plan is not None else rec.fc_plan
     return entries, conv_entries
 
 

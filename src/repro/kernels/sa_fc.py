@@ -1,32 +1,46 @@
-"""SA-FC — the weight-streaming systolic dataflow as a Pallas kernel.
+"""SA-FC — the batch-amortized weight-streaming systolic dataflow as a
+Pallas kernel.
 
 Paper mapping (Fig. 7D, Fig. 8): FC layers have per-sample weight reuse = 1,
 so a weight-stationary array stalls on the K-cycle refill between tiles.
 SA-FC adds *dedicated weight buses to every PE* so a fresh K x L weight tile
 enters the array every cycle; throughput becomes bound by the weight stream
-(DRAM bandwidth), which is the correct regime for a memory-bound operator.
+(DRAM bandwidth).  That stream only pays off when each weight byte is
+*amortized across a batch of samples* — which is exactly what this kernel's
+grid encodes.
 
-TPU adaptation: in a batched-decode GEMV ``(b,k) @ (k,n)`` with small ``b``,
-arithmetic intensity ~ 2b FLOP/byte << ridge (~240), so the kernel's job is
-to *stream every weight byte from HBM exactly once* at full bandwidth while
-activations and the fp32 accumulator stay VMEM-resident:
+TPU adaptation: in a batched GEMM ``(b,k) @ (k,n)`` with small per-tile
+batch, arithmetic intensity ~ 2*bb FLOP/byte << ridge (~240), so the
+kernel's job is to stream every weight byte from HBM exactly once **per
+batch tile** at full bandwidth while the activation tile and the fp32
+accumulator stay VMEM-resident:
 
-* activations ``x`` -> whole (b,k) block resident (constant index map);
-* weights ``w``     -> (bk, bn) tiles, each visited exactly once (grid
-  covers the weight matrix bijectively), double-buffered so the next tile's
-  DMA overlaps the current tile's MAC — the per-PE weight-bus analogue;
-* accumulator       -> (b, bn) fp32 scratch carried across the K dimension
-  (the accumulation-unit SPM), flushed through the fused
+* activations ``x`` -> one ``(bb, bk)`` tile resident per (batch, K) step;
+  the batch tile ``bb`` is the planner's amortization lever
+  (:class:`repro.core.dataflow.FCPlan`) — the whole ``(b, k)`` block is
+  *not* forced resident, so serving batch sizes cannot silently blow the
+  VMEM budget;
+* weights ``w``     -> ``(bk, bn)`` tiles, each visited once per batch
+  tile (grid covers the weight matrix bijectively per batch step),
+  double-buffered so the next tile's DMA overlaps the current tile's MAC
+  — the per-PE weight-bus analogue.  Total weight traffic =
+  ``ceil(b/bb) * k * n * itemsize`` bytes: the compulsory minimum when the
+  batch fits one tile, the batch-amortized stream otherwise;
+* accumulator       -> ``(bb, bn)`` fp32 scratch carried across the K
+  dimension (the accumulation-unit SPM), flushed through the fused
   scale+bias+activation epilogue on the last K step.
 
 int8 weights (the paper's 8-bit fixed point): ``w`` may be int8 with a
 per-output-channel ``w_scale`` (1, n).  The int8 tile is widened *inside
 the kernel* (VMEM -> registers) and the scale multiplies the fp32
-accumulator once, at flush — so HBM moves exactly 1 byte/weight and no
-dequantized copy of the weight matrix ever exists.
+accumulator once, at flush — so HBM moves exactly 1 byte/weight/pass and
+no dequantized copy of the weight matrix ever exists.
 
-The block shapes are chosen by the planner for *bandwidth*, not MXU
-occupancy: large contiguous (bk, bn) weight tiles; nothing is re-read.
+``vmem_limit`` makes the residency claim checkable: the kernel computes
+its working set with the same :func:`repro.core.dataflow.fc_vmem_bytes`
+the planner budgets with and refuses block shapes that could never be
+resident on the modeled hardware (previously nothing stopped a caller
+from requesting them).
 """
 from __future__ import annotations
 
@@ -38,6 +52,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.dataflow import fc_vmem_bytes
 from repro.kernels import ref
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
@@ -50,18 +65,19 @@ def _sa_fc_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool,
     s_ref = rest.pop(0) if has_scale else None
     b_ref = rest.pop(0) if has_bias else None
     o_ref, acc_ref = rest
-    kk = pl.program_id(1)
+    kk = pl.program_id(2)
 
     @pl.when(kk == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # One streamed weight tile: consumed once, never revisited.  int8 tiles
-    # widen here, on-chip — the raw int8 accumulator is rescaled at flush.
+    # One streamed weight tile: consumed once per batch tile, never
+    # revisited inside it.  int8 tiles widen here, on-chip — the raw int8
+    # accumulator is rescaled at flush.
     acc_ref[...] += jnp.dot(x_ref[...], w_ref[...].astype(x_ref.dtype),
                             preferred_element_type=jnp.float32)
 
-    @pl.when(kk == pl.num_programs(1) - 1)
+    @pl.when(kk == pl.num_programs(2) - 1)
     def _flush():
         out = acc_ref[...]
         if has_scale:
@@ -71,23 +87,36 @@ def _sa_fc_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool,
         o_ref[...] = ref.apply_act(out, act).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("act", "bn", "bk", "out_dtype",
-                                             "interpret"))
+@functools.partial(jax.jit, static_argnames=("act", "bb", "bn", "bk",
+                                             "out_dtype", "interpret",
+                                             "vmem_limit"))
 def sa_fc_matmul(x: jax.Array, w: jax.Array,
                  bias: Optional[jax.Array] = None, *,
                  act: str = "none",
+                 bb: Optional[int] = None,
                  bn: int = 512, bk: int = 512,
                  w_scale: Optional[jax.Array] = None,
                  out_dtype=None,
+                 vmem_limit: Optional[int] = None,
                  interpret: bool = True) -> jax.Array:
-    """(b,k) @ (k,n) for small b — weight-streaming dataflow.
+    """(b,k) @ (k,n) — batch-amortized weight-streaming dataflow.
 
-    Grid is (n-tiles, k-tiles) with K innermost: each weight tile is read
-    from HBM exactly once; total weight traffic = k*n*itemsize bytes, the
-    compulsory minimum (the paper's "fetch the weights once only").
+    Grid is ``(batch-tiles, n-tiles, k-tiles)`` with K innermost: each
+    weight tile is read from HBM exactly once per batch tile, so total
+    weight traffic is ``ceil(b/bb) * k * n * itemsize`` bytes — the
+    planner's (:func:`repro.core.dataflow.plan_fc`) amortized stream.
+    ``bb=None`` keeps the whole (padded) batch resident in one tile
+    (weights fetched once only, the paper's Fig. 8 semantics — correct
+    whenever the batch fits the budget).
 
     ``w`` may be int8 with ``w_scale`` (1, n) per-output-channel scales;
     dequantization fuses into the accumulator-flush epilogue.
+
+    ``vmem_limit`` (bytes) rejects block shapes whose resident working set
+    — activation tile, double-buffered weight tile, fp32 accumulator,
+    output tile, per :func:`repro.core.dataflow.fc_vmem_bytes` — exceeds
+    the modeled on-chip budget, instead of silently "running" an
+    impossible residency in interpret mode.
     """
     b, k = x.shape
     k2, n = w.shape
@@ -95,40 +124,53 @@ def sa_fc_matmul(x: jax.Array, w: jax.Array,
     out_dtype = out_dtype or x.dtype
 
     bp = max(SUBLANE, ((b + SUBLANE - 1) // SUBLANE) * SUBLANE)
+    if bb is None:
+        bb = bp                                  # whole batch resident
+    bb = max(SUBLANE, min(((bb + SUBLANE - 1) // SUBLANE) * SUBLANE, bp))
     bn = min(bn, ((n + 127) // 128) * 128)
     bk = min(bk, ((k + 127) // 128) * 128)
-    gn, gk = pl.cdiv(n, bn), pl.cdiv(k, bk)
+    gb, gn, gk = pl.cdiv(bp, bb), pl.cdiv(n, bn), pl.cdiv(k, bk)
 
-    xp = jnp.pad(x, ((0, bp - b), (0, gk * bk - k)))
+    if vmem_limit is not None:
+        need = fc_vmem_bytes(bb, bn, bk, bytes_in=x.dtype.itemsize,
+                             bytes_w=w.dtype.itemsize,
+                             bytes_out=jnp.dtype(out_dtype).itemsize)
+        if need > vmem_limit:
+            raise ValueError(
+                f"sa_fc_matmul block (bb={bb}, bn={bn}, bk={bk}) needs "
+                f"{need} resident bytes > vmem_limit={vmem_limit}; "
+                f"plan smaller tiles (repro.core.dataflow.plan_fc)")
+
+    xp = jnp.pad(x, ((0, gb * bb - b), (0, gk * bk - k)))
     wp = jnp.pad(w, ((0, gk * bk - k), (0, gn * bn - n)))
     has_bias = bias is not None
     has_scale = w_scale is not None
 
     in_specs = [
-        pl.BlockSpec((bp, bk), lambda j, kk: (0, kk)),     # acts: resident rows
-        pl.BlockSpec((bk, bn), lambda j, kk: (kk, j)),     # weights: streamed
+        pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),   # acts: batch tile
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # weights: streamed
     ]
     args = [xp, wp]
     if has_scale:
         sp = jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
                      ((0, 0), (0, gn * bn - n)))
-        in_specs.append(pl.BlockSpec((1, bn), lambda j, kk: (0, j)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         args.append(sp)
     if has_bias:
         biasp = jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn)
-        in_specs.append(pl.BlockSpec((1, bn), lambda j, kk: (0, j)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
         args.append(biasp)
 
     out = pl.pallas_call(
         functools.partial(_sa_fc_kernel, act=act, has_bias=has_bias,
                           has_scale=has_scale),
-        grid=(gn, gk),
+        grid=(gb, gn, gk),
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((bp, bn), lambda j, kk: (0, j)),
-        out_shape=jax.ShapeDtypeStruct((bp, gn * bn), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bp, bn), jnp.float32)],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((gb * bb, gn * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(*args)
     return out[:b, :n]

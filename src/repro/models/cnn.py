@@ -114,6 +114,54 @@ def network_stats(name: str, *, in_res: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# classifier head in isolation — the SA-FC workload (paper Fig. 6b: the FC
+# stack holds nearly all of AlexNet/VGG's weights at weight reuse 1, so it
+# is the batch-amortization target benchmarks/fc_batch.py measures and
+# serve/cnn_server.py batches for)
+# ---------------------------------------------------------------------------
+def fc_head(name: str, *, in_res: Optional[int] = None, in_ch: int = 3,
+            width_mult: float = 1.0) -> list[Tuple[int, int, str]]:
+    """(fan_in, fan_out, act) triples of the network's FC stack, geometry
+    from :func:`network_stats` (single source of truth for the shape
+    propagation).  ``width_mult`` scales every dimension uniformly (min 8)
+    so the chain stays consistent — the wall-clock benchmarks shrink the
+    head without changing its shape structure."""
+    spec, _ = NETWORKS[name]
+    fcs = [s for s in spec if s.kind == "fc"]
+    stats = [l for l in network_stats(name, in_res=in_res, in_ch=in_ch)
+             if l.kind == "fc"]
+
+    def scale(d: int) -> int:
+        return max(8, int(d * width_mult))
+
+    return [(scale(l.ifm[2]), scale(l.ofm[2]), s.act)
+            for l, s in zip(stats, fcs)]
+
+
+def init_fc_head(head: Sequence[Tuple[int, int, str]], key, *,
+                 dtype=jnp.float32) -> list:
+    params = []
+    for fan_in, fan_out, _ in head:
+        key, k1 = jax.random.split(key)
+        params.append({"w": dense_init(k1, fan_in, fan_out, dtype),
+                       "b": jnp.zeros((fan_out,), dtype)})
+    return params
+
+
+def fc_head_forward(head: Sequence[Tuple[int, int, str]], params: list,
+                    x2d: jax.Array, *,
+                    eng: Optional[engine.Engine] = None) -> jax.Array:
+    """Run just the classifier head: (batch, fan_in) -> logits, every layer
+    an engine-dispatched matmul (named fc1.. like :func:`cnn_forward`), so
+    the batch-amortized SA-FC plans/trace/schedule apply unchanged."""
+    if eng is None:
+        eng = engine.current()
+    for i, ((_, _, act), p) in enumerate(zip(head, params), start=1):
+        x2d = eng.matmul(x2d, p["w"], p["b"], act=act, name=f"fc{i}")
+    return x2d
+
+
+# ---------------------------------------------------------------------------
 # functional model (runs on the Pallas kernels)
 # ---------------------------------------------------------------------------
 def init_cnn(name: str, key, *, in_res: Optional[int] = None, in_ch: int = 3,

@@ -1,0 +1,150 @@
+"""Micro-batch coalescing CNN server — batched image serving on the
+batch-amortized SA-FC dataflow.
+
+The paper's SA-FC array only wins when each streamed weight byte is
+amortized across a batch of samples: per-sample FC weight reuse is 1
+(Sec. V-A), and AlexNet's classifier head holds ~58.6M of its ~62M
+weights, so single-image serving is bound by re-streaming the FC matrices
+per request.  This server is the CNN analogue of
+:class:`repro.serve.engine.ServeEngine`:
+
+* single-image requests queue up and are coalesced into the **planner's
+  preferred micro-batch** — the resident batch tile
+  (:attr:`~repro.core.dataflow.FCPlan.bb`) the policy's VMEM budget
+  affords the dominant FC layer, i.e. exactly the number of samples one
+  weight pass can serve;
+* each admission wave runs the whole conv+pool+FC network as ONE
+  engine-dispatched forward under a memoized batch-variant
+  :meth:`~repro.core.schedule.LayerSchedule.compile_cnn` schedule (the
+  paper's offline per-layer table, compiled once per wave shape);
+* per-request outputs are bitwise equal to the unbatched forward whenever
+  the batch variants plan the same tiles: rows are independent in every
+  kernel (the conv/pool grids carry batch as a grid dimension and the
+  SA-FC kernel contracts each sample's row independently), so batching
+  changes *traffic*, never *math*.
+
+Every wave's :class:`~repro.core.engine.DispatchTrace` is kept on the
+:class:`WaveReport` — each FC layer shows up there carrying its
+:class:`~repro.core.dataflow.FCPlan`, the serving-side twin of the
+schedule table.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import DispatchTrace, Engine
+from repro.core.schedule import LayerSchedule
+
+
+@dataclasses.dataclass
+class CNNRequest:
+    """One single-image classification request."""
+    uid: int
+    image: np.ndarray                     # (H, W, C)
+    done: bool = False
+    logits: Optional[np.ndarray] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveReport:
+    """What one coalesced dispatch did: who rode it, how it resolved."""
+    uids: Tuple[int, ...]
+    batch: int
+    schedule_hits: int
+    trace: DispatchTrace
+
+    @property
+    def fc_records(self):
+        """The FC dispatches of this wave (each carries its FCPlan)."""
+        return [r for r in self.trace if r.fc_plan is not None]
+
+
+class CNNServer:
+    """Admit single images, dispatch planner-sized micro-batches.
+
+    ``max_batch`` caps admission; the actual micro-batch is the planner's
+    resident batch tile for the network's dominant FC layer under the
+    engine's policy (a tight ``vmem_budget`` shrinks it — the server
+    admits exactly what one weight pass can amortize over)."""
+
+    def __init__(self, net: str, params: list, *,
+                 in_res: Optional[int] = None, in_ch: int = 3,
+                 width_mult: float = 1.0, max_batch: int = 64,
+                 dtype=jnp.float32,
+                 engine: Optional[Engine] = None) -> None:
+        from repro.models import cnn
+        spec, res0 = cnn.NETWORKS[net]
+        self.net = net
+        self.params = params
+        self.in_res = in_res if in_res is not None else res0
+        self.in_ch = in_ch
+        self.width_mult = width_mult
+        self.max_batch = max_batch
+        self.dtype = jnp.dtype(dtype)
+        self.engine = engine if engine is not None \
+            else Engine(backend="pallas", interpret=True)
+        self.microbatch = self._preferred_microbatch()
+        self.queue: List[CNNRequest] = []
+        self.waves: List[WaveReport] = []
+
+    # -- planning -----------------------------------------------------------
+    def _fc_shapes(self) -> List[Tuple[int, int]]:
+        """(k, n) of every FC layer, read off the actual parameters (the
+        width-scaled geometry, not the paper table)."""
+        from repro.models import cnn
+        spec, _ = cnn.NETWORKS[self.net]
+        return [tuple(p["w"].shape)
+                for s, p in zip(spec, self.params) if s.kind == "fc"]
+
+    def _preferred_microbatch(self) -> int:
+        """Plan the dominant (largest ``k*n``) FC layer at the admission
+        cap and admit the batch tile the plan keeps resident per weight
+        pass — the samples one streamed weight byte serves."""
+        k, n = max(self._fc_shapes(), key=lambda s: s[0] * s[1])
+        ab = self.dtype.itemsize
+        plan = self.engine.policy.plan_fc(self.max_batch, n, k,
+                                          act_bytes=ab, weight_bytes=ab,
+                                          regime="sa_fc")
+        return max(1, min(self.max_batch, plan.bb))
+
+    def _schedule(self, batch: int) -> LayerSchedule:
+        return LayerSchedule.compile_cnn(
+            self.net, batch=batch, in_res=self.in_res, in_ch=self.in_ch,
+            width_mult=self.width_mult, dtype=self.dtype,
+            policy=self.engine.policy, params=self.params)
+
+    # -- serving ------------------------------------------------------------
+    def submit(self, req: CNNRequest) -> None:
+        shape = (self.in_res, self.in_res, self.in_ch)
+        if tuple(req.image.shape) != shape:
+            raise ValueError(f"request {req.uid}: image shape "
+                             f"{tuple(req.image.shape)} != server {shape}")
+        self.queue.append(req)
+
+    def run(self) -> List[CNNRequest]:
+        """Drain the queue in planner-preferred micro-batches; returns the
+        completed requests."""
+        from repro.models import cnn
+        finished: List[CNNRequest] = []
+        while self.queue:
+            wave = self.queue[:self.microbatch]
+            self.queue = self.queue[len(wave):]
+            x = jnp.stack([jnp.asarray(r.image, self.dtype) for r in wave])
+            sched = self._schedule(len(wave))
+            eng = self.engine.with_schedule(sched)
+            with eng.tracing() as tr:
+                logits = cnn.cnn_forward(self.net, self.params, x, eng=eng)
+            logits = np.asarray(logits)
+            for i, r in enumerate(wave):
+                r.logits = logits[i]
+                r.done = True
+                finished.append(r)
+            self.waves.append(WaveReport(
+                uids=tuple(r.uid for r in wave), batch=len(wave),
+                schedule_hits=sum(r.schedule == "hit" for r in tr),
+                trace=tr))
+        return finished
