@@ -1,0 +1,241 @@
+"""Planner-regression gate: diff the **deterministic planner-side fields**
+of freshly generated ``BENCH_*.json`` artifacts against the committed
+baselines and exit nonzero on any drift.
+
+The planner-modeled numbers (HBM bytes, weights-bytes/sample, makespan
+ratios, flip/crossover batches, fused-pair counts) are pure functions of
+the code — no wall-clock noise — so any change is a real planner change:
+either an intended improvement (regenerate and commit the baseline) or a
+regression this gate exists to catch.  Wall-clock sections of the
+artifacts are ignored.
+
+Usage (CI wires both tiers through this):
+
+    # compare fresh artifacts in a directory against the committed ones
+    PYTHONPATH=src python benchmarks/check_bench.py --fresh-dir .bench_fresh
+
+    # or regenerate the fast-tier artifacts in a temp dir first
+    PYTHONPATH=src python benchmarks/check_bench.py --generate
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import Callable, Dict, List
+
+#: Relative tolerance for float fields: the planner math is deterministic,
+#: but JSON round-trips and libm differences across platforms can wiggle
+#: the last bits of a ratio.
+FLOAT_RTOL = 1e-9
+
+
+def _conv_fused_fields(doc: dict) -> dict:
+    """conv_fused: planner HBM bytes + fusion decisions per config."""
+    out = {}
+    for net in doc.get("nets", []):
+        tag = (f"{net['net']}_w{net['width_mult']}_r{net['in_res']}"
+               f"_b{net['batch']}_vmem{net['vmem_budget']}")
+        out[tag] = {
+            "planner_hbm_bytes": net["planner_hbm_bytes"],
+            "fused_pairs": net["fused_pairs"],
+            "tap_flip": net["tap_flip"],
+            "layers": {r["layer"]: {k: r[k] for k in
+                                    ("fused_bytes", "unfused_bytes",
+                                     "saving_bytes")}
+                       for r in net.get("layers", [])},
+        }
+    return out
+
+
+def _fc_batch_fields(doc: dict) -> dict:
+    """fc_batch: the whole planner section is analytic (always the
+    full-size head, tier-independent)."""
+    head = doc.get("headline", {})
+    return {
+        "planner": doc.get("planner", {}),
+        "headline_planner": {
+            k: head.get(k) for k in
+            ("stack_weight_MiB_per_sample_b1",
+             "stack_weight_MiB_per_sample_b64",
+             "planner_amortization_b64_vs_b1", "flip_batch")},
+    }
+
+
+def _pipeline_fields(doc: dict) -> dict:
+    """pipeline_serve: the modeled section (makespan ratios, crossover
+    batches, schedule-side overlap) is fully deterministic."""
+    head = doc.get("headline", {})
+    return {
+        "modeled": doc.get("modeled", {}),
+        "headline_modeled": {
+            k: head.get(k) for k in
+            ("alexnet_tpu_makespan_ratio_b8w8",
+             "vgg16_tpu_makespan_ratio_b8w8",
+             "crossover_batch_tpu_fp32")},
+    }
+
+
+#: artifact filename -> deterministic-subtree extractor
+ARTIFACTS: Dict[str, Callable[[dict], dict]] = {
+    "BENCH_conv_fused.json": _conv_fused_fields,
+    "BENCH_fc_batch.json": _fc_batch_fields,
+    "BENCH_pipeline.json": _pipeline_fields,
+}
+
+
+def _diff(base, fresh, path: str, out: List[str]) -> None:
+    """Recursive structural diff; baseline keys must all survive with
+    equal values (fresh may add new keys — new configs are not a
+    regression)."""
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            out.append(f"{path}: dict -> {type(fresh).__name__}")
+            return
+        for k, v in base.items():
+            if k not in fresh:
+                out.append(f"{path}.{k}: missing from fresh artifact")
+            else:
+                _diff(v, fresh[k], f"{path}.{k}", out)
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list) or len(base) != len(fresh):
+            out.append(f"{path}: list changed "
+                       f"({base!r} -> {fresh!r})")
+            return
+        for i, (b, f) in enumerate(zip(base, fresh)):
+            _diff(b, f, f"{path}[{i}]", out)
+        return
+    if isinstance(base, float) or isinstance(fresh, float):
+        try:
+            bf, ff = float(base), float(fresh)
+        except (TypeError, ValueError):
+            out.append(f"{path}: {base!r} -> {fresh!r}")
+            return
+        tol = FLOAT_RTOL * max(abs(bf), abs(ff), 1.0)
+        if abs(bf - ff) > tol:
+            out.append(f"{path}: {base!r} -> {fresh!r}")
+        return
+    if base != fresh:
+        out.append(f"{path}: {base!r} -> {fresh!r}")
+
+
+def check_pair(baseline_path: str, fresh_path: str,
+               extract: Callable[[dict], dict]) -> List[str]:
+    """Diff one artifact pair; returns the list of regressions."""
+    with open(baseline_path) as fh:
+        base = extract(json.load(fh))
+    with open(fresh_path) as fh:
+        fresh = extract(json.load(fh))
+    if not base:
+        return [f"{baseline_path}: no deterministic fields found "
+                "(unrecognized artifact layout?)"]
+    diffs: List[str] = []
+    _diff(base, fresh, os.path.basename(baseline_path), diffs)
+    return diffs
+
+
+def generate_fresh(out_dir: str) -> List[str]:
+    """Regenerate the fast-tier artifacts (the tier the committed
+    baselines are) into ``out_dir``; returns generation errors.
+
+    The gate only reads planner-side fields, so the wall-clock knobs are
+    shrunk to reps=1/trials=1 first — regeneration must not repeat the
+    interleaved-median timing loops CI already ran for the real
+    artifacts.  A benchmark whose internal consistency checks fail is
+    reported as a gate failure (its artifact is still written, so the
+    field diff runs too)."""
+    try:
+        from benchmarks import conv_fused, fc_batch, pipeline_serve
+    except ImportError:
+        import conv_fused
+        import fc_batch
+        import pipeline_serve
+    conv_fused.CONFIGS = {
+        "fast": [cfg[:5] + (1, 1) for cfg in conv_fused.CONFIGS["fast"]]}
+    fc_batch.WALL_CONFIGS = {
+        "fast": [cfg[:3] + (1, 1) for cfg in fc_batch.WALL_CONFIGS["fast"]]}
+    pipeline_serve.WALL_CONFIGS = {
+        "fast": [cfg[:4] + (1, 1)
+                 for cfg in pipeline_serve.WALL_CONFIGS["fast"]]}
+    errors: List[str] = []
+    for mod, name in ((conv_fused, "BENCH_conv_fused.json"),
+                      (fc_batch, "BENCH_fc_batch.json"),
+                      (pipeline_serve, "BENCH_pipeline.json")):
+        print(f"[check_bench] generating {name} (fast tier, planner "
+              "focus) ...", flush=True)
+        try:
+            mod.emit(os.path.join(out_dir, name), tier="fast")
+        except AssertionError as e:    # incl. BenchConsistencyError
+            errors.append(f"{name}: generation-time consistency check "
+                          f"failed: {e}")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline-dir", default=".",
+                    help="directory holding the committed BENCH_*.json "
+                         "baselines (default: repo root)")
+    ap.add_argument("--fresh-dir", default=None,
+                    help="directory holding freshly generated artifacts "
+                         "to check against the baselines")
+    ap.add_argument("--generate", action="store_true",
+                    help="regenerate the fast-tier artifacts into a temp "
+                         "dir and check those (no --fresh-dir needed)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="BENCH_x.json",
+                    help="restrict the check to these artifact names")
+    args = ap.parse_args()
+    if (args.fresh_dir is None) == (not args.generate):
+        ap.error("exactly one of --fresh-dir / --generate is required")
+
+    names = list(ARTIFACTS)
+    if args.only:
+        unknown = sorted(set(args.only) - set(names))
+        if unknown:
+            ap.error(f"unknown artifact(s) {unknown}; known: {names}")
+        names = [n for n in names if n in args.only]
+
+    with tempfile.TemporaryDirectory() as tmp:
+        fresh_dir = args.fresh_dir
+        failures: List[str] = []
+        if args.generate:
+            fresh_dir = tmp
+            failures.extend(generate_fresh(tmp))
+        checked = 0
+        for name in names:
+            base_p = os.path.join(args.baseline_dir, name)
+            fresh_p = os.path.join(fresh_dir, name)
+            if not os.path.exists(base_p):
+                print(f"[check_bench] SKIP {name}: no committed baseline "
+                      f"at {base_p}")
+                continue
+            if not os.path.exists(fresh_p):
+                failures.append(f"{name}: fresh artifact missing at "
+                                f"{fresh_p}")
+                continue
+            diffs = check_pair(base_p, fresh_p, ARTIFACTS[name])
+            checked += 1
+            if diffs:
+                failures.extend(diffs)
+                print(f"[check_bench] FAIL {name}: {len(diffs)} "
+                      "planner-side field(s) drifted")
+            else:
+                print(f"[check_bench] OK   {name}: deterministic fields "
+                      "match the committed baseline")
+    if checked == 0:
+        failures.append("no artifact pair was checked — nothing gated")
+    if failures:
+        print("\nPlanner regression(s) detected (if intended, regenerate "
+              "and commit the baseline):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        sys.exit(1)
+    print(f"[check_bench] all {checked} artifact(s) clean")
+
+
+if __name__ == "__main__":
+    main()

@@ -30,15 +30,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 try:                                    # package import (benchmarks.run)
-    from benchmarks.timing import interleaved_medians
+    from benchmarks.timing import interleaved_medians, \
+        raise_on_failed_checks, run_emit_cli
 except ImportError:                     # direct script execution
-    from timing import interleaved_medians
+    from timing import interleaved_medians, raise_on_failed_checks, \
+        run_emit_cli
 
 Row = Tuple[str, float, str]
 
@@ -181,10 +184,14 @@ def bench_net(net: str, width_mult: float, in_res: int, batch: int = 1,
     fused_fn, unfused_fn = _conv_stack_fns(net, params, eng)
     # numerics: a tap-mode flip changes accumulation order (one fused dot
     # vs a tap-wise sum), so parity is allclose; the exact-match guarantee
-    # (same kernel mode) is covered by tests/test_fused_pool.py
-    np.testing.assert_allclose(np.asarray(fused_fn(x)),
-                               np.asarray(unfused_fn(x)),
-                               rtol=1e-3, atol=1e-3)
+    # (same kernel mode) is covered by tests/test_fused_pool.py.  The
+    # check is recorded (and fails the process via emit()) instead of
+    # silently publishing an artifact whose two paths disagree.
+    yf, yu = np.asarray(fused_fn(x)), np.asarray(unfused_fn(x))
+    parity = {"name": f"parity/{net}_w{width_mult}_r{in_res}"
+                      f"_vmem{vmem_budget}",
+              "passed": bool(np.allclose(yf, yu, rtol=1e-3, atol=1e-3)),
+              "detail": f"max|fused-unfused|={float(np.max(np.abs(yf-yu)))}"}
     wall_stack = _ab_wall(fused_fn, unfused_fn, x, reps=reps, trials=trials)
     pairs = _pair_fns(net, params, eng, x)
     pf, pu = 0.0, 0.0
@@ -222,6 +229,7 @@ def bench_net(net: str, width_mult: float, in_res: int, batch: int = 1,
         "vmem_budget": vmem_budget,
         "fused_pairs": int(n_fused),
         "tap_flip": tap_flip,
+        "checks": [parity],
         "wall_s": {"conv_stack": wall_stack, "conv_pool_pairs": wall_pairs},
         "planner_hbm_bytes": {"fused": int(hbm_fused),
                               "unfused": int(hbm_unfused),
@@ -259,11 +267,14 @@ def emit(out_path: str = "BENCH_conv_fused.json", *,
         "hbm_saving_bytes": sum(
             r["planner_hbm_bytes"]["saving"] for r in results["nets"]),
     }
+    results["checks"] = [c for r in results["nets"] for c in r["checks"]]
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2)
     rows.append(("conv_fused/json", 0.0,
                  f"wrote {out_path} (headline alexnet pairs "
                  f"{results['headline']['alexnet_conv_pool_pairs_speedup']:.2f}x)"))
+    raise_on_failed_checks(results["checks"])
     return rows
 
 
@@ -284,8 +295,7 @@ def main() -> None:
                       help="nightly: full-res stacks incl. the VMEM-budget "
                            "tap-flip headline config")
     args = ap.parse_args()
-    for name, us, derived in emit(args.out, tier=args.tier):
-        print(f"{name},{us:.1f},{derived}")
+    run_emit_cli(emit, args.out, args.tier)
 
 
 if __name__ == "__main__":

@@ -28,15 +28,18 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 try:                                    # package import (benchmarks.run)
-    from benchmarks.timing import interleaved_medians
+    from benchmarks.timing import interleaved_medians, \
+        raise_on_failed_checks, run_emit_cli
 except ImportError:                     # direct script execution
-    from timing import interleaved_medians
+    from timing import interleaved_medians, raise_on_failed_checks, \
+        run_emit_cli
 
 Row = Tuple[str, float, str]
 
@@ -103,12 +106,33 @@ def wall_section(net: str, width_mult: float, batches, *,
     from repro.core.engine import Engine
     from repro.models import cnn
 
+    import numpy as np
+
     head = cnn.fc_head(net, width_mult=width_mult)
     params = cnn.init_fc_head(head, jax.random.PRNGKey(0))
     eng = Engine(backend="pallas", interpret=True)
     k0 = head[0][0]
     xs = {b: jax.random.normal(jax.random.PRNGKey(b), (b, k0), jnp.float32)
           for b in batches}
+
+    # consistency: batching amortizes traffic, never changes math — the
+    # batched head forward must be bitwise equal to the per-sample
+    # forwards unbatched serving would run (rows are independent in the
+    # batch-tiled SA-FC kernel).  Row independence is batch-agnostic, so
+    # the check is capped: b=256 would add hundreds of interpret-mode
+    # single-sample forwards to the nightly tier for no extra assurance.
+    bchk = max(b for b in batches if b <= 16)
+    batched = np.asarray(cnn.fc_head_forward(head, params, xs[bchk],
+                                             eng=eng))
+    singles = np.concatenate(
+        [np.asarray(cnn.fc_head_forward(head, params, xs[bchk][i:i + 1],
+                                        eng=eng))
+         for i in range(bchk)])
+    check = {"name": f"parity/{net}_w{width_mult:.3g}_b{bchk}"
+                     "/batched_bitwise_equal_singles",
+             "passed": bool(np.array_equal(batched, singles)),
+             "detail": f"max|diff|="
+                       f"{float(np.max(np.abs(batched - singles)))}"}
 
     fns = {"b1": lambda: cnn.fc_head_forward(head, params, xs[1][:1],
                                              eng=eng)}
@@ -128,7 +152,8 @@ def wall_section(net: str, width_mult: float, batches, *,
                      "amortization": round(single / batched, 2)})
     return {"net": net, "width_mult": width_mult,
             "head": [[k, n, act] for k, n, act in head],
-            "reps": reps, "trials": trials, "rows": rows}
+            "reps": reps, "trials": trials, "rows": rows,
+            "checks": [check]}
 
 
 def emit(out_path: str = "BENCH_fc_batch.json", *,
@@ -150,9 +175,24 @@ def emit(out_path: str = "BENCH_fc_batch.json", *,
         "wall_amortization_at_bmax":
             max(r["amortization"] for w in walls for r in w["rows"]),
     }
+    checks = [c for w in walls for c in w["checks"]]
+    # planner invariants: weights-bytes/sample must be non-increasing in
+    # the batch, and the b=64-vs-b=1 amortization must clear the 32x bar
+    curve = [pb[str(b)]["stack_weight_bytes_per_sample"]
+             for b in planner["batches"]]
+    checks.append({"name": "planner/weights_per_sample_non_increasing",
+                   "passed": all(a >= b for a, b in zip(curve, curve[1:])),
+                   "detail": f"curve={curve}"})
+    checks.append({"name": "planner/amortization_b64_vs_b1_ge_32",
+                   "passed": bool(
+                       headline["planner_amortization_b64_vs_b1"] >= 32),
+                   "detail": f"{headline['planner_amortization_b64_vs_b1']}"
+                             "x"})
     results = {"bench": "fc_batch", "tier": tier,
                "backend": "pallas-interpret-cpu",
-               "planner": planner, "wall": walls, "headline": headline}
+               "planner": planner, "wall": walls, "headline": headline,
+               "checks": checks}
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2)
 
@@ -175,6 +215,7 @@ def emit(out_path: str = "BENCH_fc_batch.json", *,
                  f"wrote {out_path} (planner amortization b64 "
                  f"{headline['planner_amortization_b64_vs_b1']:.0f}x, "
                  f"flip fc1 @ b={planner['flip_batch']['fc1']})"))
+    raise_on_failed_checks(checks)
     return rows
 
 
@@ -195,8 +236,7 @@ def main() -> None:
                       help="nightly: quarter- and full-width heads up to "
                            "b=256")
     args = ap.parse_args()
-    for name, us, derived in emit(args.out, tier=args.tier):
-        print(f"{name},{us:.1f},{derived}")
+    run_emit_cli(emit, args.out, args.tier)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,280 @@
+"""Dual-array pipelined serving benchmark — the machine-readable perf
+trajectory for running SA-CONV and SA-FC concurrently across waves.
+
+The paper's two heterogeneous arrays "jointly accelerate both the CONV
+and the FC layers"; the pipelined :class:`~repro.serve.cnn_server.CNNServer`
+models that by overlapping wave *i*'s FC head with wave *i+1*'s conv
+stack.  This benchmark records both sides of the story:
+
+* **modeled** (fully deterministic, gated by ``benchmarks/check_bench.py``)
+  — the overlapped-vs-serial makespan ratio per serving mix on the
+  paper-ASIC cycle model (:func:`~repro.core.perf_model.pipeline_makespan`)
+  and on the TPU roofline from the compiled stage schedules
+  (:func:`~repro.core.roofline.pipeline_overlap_from_schedule`), plus the
+  planner-pinned bottleneck **crossover batch** per net (below it the
+  wave is FC-bound — AlexNet's 224 MiB fp32 head holds to b=29 — above
+  it CONV-bound; VGG-16 flips at b=5);
+* **wall** — interleaved-median A/B (benchmarks/timing.py) of the
+  pipelined vs the sequential server draining the same request queue on
+  a width-scaled AlexNet (interpret-mode Pallas on CPU executes stages
+  synchronously, so the wall delta mostly reflects dispatch overhead —
+  the modeled ratio is the acceptance signal).
+
+Internal consistency checks (pipelined logits bitwise equal to the
+sequential server's, every modeled makespan ratio > 1.0) are recorded in
+the artifact AND fail the process: the script exits nonzero when any
+check fails, so CI can observe it.
+
+Writes ``BENCH_pipeline.json`` so the trajectory is diffable across PRs:
+
+    PYTHONPATH=src python benchmarks/pipeline_serve.py --fast --out BENCH_pipeline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Tuple
+
+import numpy as np
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks.timing import interleaved_medians, \
+        raise_on_failed_checks, run_emit_cli
+except ImportError:                     # direct script execution
+    from timing import interleaved_medians, raise_on_failed_checks, \
+        run_emit_cli
+
+Row = Tuple[str, float, str]
+
+
+#: Serving mixes the modeled section sweeps: (batch, waves) per net, full
+#: paper geometry.  Deterministic — gated by check_bench.py.
+MODELED_MIXES = ((1, 8), (8, 8), (32, 4))
+
+#: Wall-clock configs: (width_mult, in_res, n_requests, microbatch, reps,
+#: trials) per tier — width-scaled AlexNet serving, CI-smoke scale.
+WALL_CONFIGS = {
+    "fast": [(1 / 16, 67, 6, 2, 1, 3)],
+    "full": [(0.125, 67, 8, 2, 1, 5)],
+}
+
+
+def modeled_section(checks: List[dict]) -> dict:
+    """Makespan ratios + crossover batches, ASIC cycle model and TPU
+    roofline — every number here is planner-side deterministic."""
+    from repro.core import perf_model as PM
+    from repro.core.roofline import pipeline_overlap_from_schedule
+    from repro.core.schedule import LayerSchedule
+
+    out = {}
+    for net in ("alexnet", "vgg16"):
+        mixes = []
+        for batch, waves in MODELED_MIXES:
+            asic = PM.pipeline_makespan(net, batch, waves=waves)
+            conv_s, fc_s = PM.pipeline_stage_seconds(net, batch)
+            # the makespan dataclass is unit-agnostic: feed it the TPU
+            # stage seconds so both sides share ONE overlap formula
+            tpu = PM.PipelineMakespan(net, batch, waves, conv_s, fc_s)
+            mix = {
+                "batch": batch, "waves": waves,
+                "asic": {
+                    "conv_cycles_per_wave": asic.conv_cycles_per_wave,
+                    "fc_cycles_per_wave": asic.fc_cycles_per_wave,
+                    "bottleneck": asic.bottleneck,
+                    "makespan_ratio": round(asic.makespan_ratio, 6),
+                    "overlap_efficiency": round(asic.overlap_efficiency, 6),
+                },
+                "tpu": {
+                    "conv_stage_us": round(conv_s * 1e6, 3),
+                    "fc_stage_us": round(fc_s * 1e6, 3),
+                    "bottleneck": tpu.bottleneck,
+                    "makespan_ratio": round(tpu.makespan_ratio, 6),
+                    "overlap_efficiency": round(tpu.overlap_efficiency, 6),
+                },
+            }
+            mixes.append(mix)
+            for side in ("asic", "tpu"):
+                checks.append({
+                    "name": f"modeled/{net}_b{batch}_w{waves}/{side}"
+                            "/makespan_ratio_gt_1",
+                    "passed": bool(mix[side]["makespan_ratio"] > 1.0),
+                    "detail": f"ratio={mix[side]['makespan_ratio']}"})
+        out[net] = {
+            "mixes": mixes,
+            "crossover_batch": {
+                "tpu_fp32": PM.tpu_pipeline_crossover_batch(net),
+                "tpu_int8_w": PM.tpu_pipeline_crossover_batch(net,
+                                                              bytes_w=1),
+                "asic": PM.pipeline_crossover_batch(net),
+            },
+        }
+    # AlexNet's classifier head keeps it FC-bound to a much larger batch
+    # than conv-dominated VGG-16 — the paper's Fig. 6 asymmetry as a
+    # pipeline-bottleneck statement
+    a = out["alexnet"]["crossover_batch"]["tpu_fp32"]
+    v = out["vgg16"]["crossover_batch"]["tpu_fp32"]
+    checks.append({"name": "modeled/crossover/alexnet_more_fc_bound",
+                   "passed": bool(a > v >= 1),
+                   "detail": f"alexnet={a}, vgg16={v}"})
+
+    # schedule-side overlap (the exact plans the pipelined server runs,
+    # width-scaled serving geometry): compiled stage schedules
+    sched_rows = []
+    for net, res, wm, batch in (("alexnet", 67, 0.125, 4),
+                                ("vgg16", 32, 0.125, 4)):
+        cs, fs = LayerSchedule.compile_cnn_stages(net, batch=batch,
+                                                  in_res=res,
+                                                  width_mult=wm)
+        rep = pipeline_overlap_from_schedule(cs, fs, waves=8)
+        sched_rows.append({"net": net, "in_res": res, "width_mult": wm,
+                           "batch": batch, **rep})
+        checks.append({
+            "name": f"modeled/schedule_overlap/{net}/makespan_ratio_gt_1",
+            "passed": bool(rep["makespan_ratio"] > 1.0),
+            "detail": f"ratio={rep['makespan_ratio']:.6f}"})
+    return {"mixes_swept": list(MODELED_MIXES), "nets": out,
+            "schedule_overlap": sched_rows}
+
+
+def _serve_once(net: str, params, images, *, in_res: int, width_mult: float,
+                microbatch: int, pipelined: bool) -> np.ndarray:
+    """Drain one request queue through a fresh server; returns stacked
+    logits in uid order (blocking)."""
+    from repro.serve.cnn_server import CNNRequest, CNNServer
+    srv = CNNServer(net, params, in_res=in_res, width_mult=width_mult,
+                    max_batch=microbatch, pipeline=pipelined)
+    srv.microbatch = microbatch
+    for i, img in enumerate(images):
+        srv.submit(CNNRequest(uid=i, image=img))
+    done = srv.run(pipelined=pipelined)
+    return np.stack([r.logits for r in sorted(done, key=lambda r: r.uid)])
+
+
+def wall_section(width_mult: float, in_res: int, n_req: int,
+                 microbatch: int, *, reps: int, trials: int,
+                 checks: List[dict]) -> dict:
+    """Interleaved-median wall A/B of the pipelined vs sequential server
+    draining the same queue, plus the bitwise parity check."""
+    import jax
+
+    from repro.models import cnn
+
+    params = cnn.init_cnn("alexnet", jax.random.PRNGKey(0), in_res=in_res,
+                          width_mult=width_mult)
+    rng = np.random.default_rng(0)
+    images = [rng.standard_normal((in_res, in_res, 3)).astype(np.float32)
+              for _ in range(n_req)]
+    kw = dict(in_res=in_res, width_mult=width_mult, microbatch=microbatch)
+
+    pipe = _serve_once("alexnet", params, images, pipelined=True, **kw)
+    seq = _serve_once("alexnet", params, images, pipelined=False, **kw)
+    bitwise = bool(np.array_equal(pipe, seq))
+    checks.append({"name": f"wall/alexnet_w{width_mult:.3g}_r{in_res}"
+                           "/pipelined_bitwise_equal_sequential",
+                   "passed": bitwise,
+                   "detail": f"{n_req} requests, microbatch {microbatch}, "
+                             f"max|diff|="
+                             f"{float(np.max(np.abs(pipe - seq)))}"})
+
+    med = interleaved_medians(
+        {"pipelined": lambda: _serve_once("alexnet", params, images,
+                                          pipelined=True, **kw),
+         "sequential": lambda: _serve_once("alexnet", params, images,
+                                           pipelined=False, **kw)},
+        reps=reps, trials=trials)
+    return {"net": "alexnet", "width_mult": width_mult, "in_res": in_res,
+            "n_requests": n_req, "microbatch": microbatch,
+            "waves": -(-n_req // microbatch),
+            "reps": reps, "trials": trials,
+            "pipelined_s": med["pipelined"],
+            "sequential_s": med["sequential"],
+            "wall_ratio": round(med["sequential"] / med["pipelined"], 3),
+            "bitwise_equal": bitwise}
+
+
+def emit(out_path: str = "BENCH_pipeline.json", *,
+         tier: str = "fast") -> List[Row]:
+    """Run the benchmark, write the JSON artifact, return CSV rows for
+    benchmarks/run.py.  Raises :class:`BenchConsistencyError` (after
+    writing the artifact) when any internal check fails."""
+    checks: List[dict] = []
+    modeled = modeled_section(checks)
+    walls = [wall_section(wm, res, n, mb, reps=reps, trials=trials,
+                          checks=checks)
+             for wm, res, n, mb, reps, trials in WALL_CONFIGS[tier]]
+
+    alex = modeled["nets"]["alexnet"]["mixes"]
+    vgg = modeled["nets"]["vgg16"]["mixes"]
+    headline = {
+        "alexnet_tpu_makespan_ratio_b8w8": next(
+            (m["tpu"]["makespan_ratio"] for m in alex
+             if m["batch"] == 8 and m["waves"] == 8), None),
+        "vgg16_tpu_makespan_ratio_b8w8": next(
+            (m["tpu"]["makespan_ratio"] for m in vgg
+             if m["batch"] == 8 and m["waves"] == 8), None),
+        "crossover_batch_tpu_fp32": {
+            "alexnet": modeled["nets"]["alexnet"]["crossover_batch"]
+            ["tpu_fp32"],
+            "vgg16": modeled["nets"]["vgg16"]["crossover_batch"]
+            ["tpu_fp32"]},
+        "wall_ratio": walls[0]["wall_ratio"] if walls else None,
+    }
+    results = {"bench": "pipeline_serve", "tier": tier,
+               "backend": "pallas-interpret-cpu",
+               "modeled": modeled, "wall": walls,
+               "headline": headline, "checks": checks}
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2)
+
+    rows: List[Row] = []
+    for net, data in modeled["nets"].items():
+        for m in data["mixes"]:
+            rows.append((
+                f"pipeline_serve/modeled/{net}_b{m['batch']}_w{m['waves']}",
+                0.0,
+                f"tpu ratio {m['tpu']['makespan_ratio']:.3f} "
+                f"({m['tpu']['bottleneck']}-bound, eff "
+                f"{m['tpu']['overlap_efficiency']:.2f}); asic ratio "
+                f"{m['asic']['makespan_ratio']:.3f}"))
+        co = data["crossover_batch"]
+        rows.append((f"pipeline_serve/crossover/{net}", 0.0,
+                     f"FC->CONV bottleneck flip at b={co['tpu_fp32']} "
+                     f"(fp32), b={co['tpu_int8_w']} (int8 weights)"))
+    for w in walls:
+        rows.append((
+            f"pipeline_serve/wall/alexnet_w{w['width_mult']:.3g}"
+            f"_r{w['in_res']}",
+            w["pipelined_s"] * 1e6,
+            f"{w['n_requests']} reqs in {w['waves']} waves: "
+            f"{w['wall_ratio']:.2f}x vs sequential "
+            f"(bitwise_equal={w['bitwise_equal']})"))
+    rows.append(("pipeline_serve/json", 0.0,
+                 f"wrote {out_path} ({len(checks)} checks, "
+                 f"{sum(not c['passed'] for c in checks)} failed)"))
+    raise_on_failed_checks(checks)
+    return rows
+
+
+def bench_rows() -> List[Row]:
+    """run.py group entry: fast tier, writes BENCH_pipeline.json."""
+    return emit("BENCH_pipeline.json", tier="fast")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_pipeline.json")
+    tier = ap.add_mutually_exclusive_group()
+    tier.add_argument("--fast", dest="tier", action="store_const",
+                      const="fast", default="fast",
+                      help="CI smoke: 1/16-width serving wall (seconds)")
+    tier.add_argument("--full", dest="tier", action="store_const",
+                      const="full",
+                      help="nightly: 1/8-width serving wall, more trials")
+    args = ap.parse_args()
+    run_emit_cli(emit, args.out, args.tier)
+
+
+if __name__ == "__main__":
+    main()

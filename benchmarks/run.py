@@ -11,7 +11,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import conv_fused, fc_batch, kernel_bench, \
-        paper_figures, roofline_report
+        paper_figures, pipeline_serve, roofline_report
 
     groups = []
     groups += paper_figures.ALL
@@ -23,6 +23,9 @@ def main() -> None:
     # batch-amortized SA-FC: weights-bytes/sample amortization curve +
     # interleaved-median wall — writes BENCH_fc_batch.json
     groups += [fc_batch.bench_rows]
+    # dual-array pipelined serving: modeled makespan ratios + crossover
+    # batches + pipelined-vs-sequential wall — writes BENCH_pipeline.json
+    groups += [pipeline_serve.bench_rows]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -13,10 +13,42 @@ would average in.
 from __future__ import annotations
 
 import statistics
+import sys
 import time
-from typing import Any, Callable, Dict, Mapping
+from typing import Any, Callable, Dict, List, Mapping
 
 import jax
+
+
+class BenchConsistencyError(AssertionError):
+    """An internal benchmark consistency check failed.  The artifact is
+    still written (with its ``checks`` section recording the failure) but
+    the process must exit nonzero so CI can observe it — benchmarks must
+    never silently publish a JSON whose own invariants don't hold."""
+
+
+def raise_on_failed_checks(checks: List[Dict[str, Any]]) -> None:
+    """Raise :class:`BenchConsistencyError` naming every failed check.
+    Call after the artifact is written so the failure is recorded AND the
+    process exits nonzero."""
+    failed = [c for c in checks if not c["passed"]]
+    if failed:
+        raise BenchConsistencyError(
+            "; ".join(f"{c['name']}: {c['detail']}" for c in failed))
+
+
+def run_emit_cli(emit: Callable[..., list], out_path: str,
+                 tier: str) -> None:
+    """Shared benchmark ``main()`` body: run ``emit``, print the CSV rows,
+    exit 1 (after the artifact is written) on a failed consistency
+    check."""
+    try:
+        rows = emit(out_path, tier=tier)
+    except BenchConsistencyError as e:
+        print(f"CONSISTENCY CHECK FAILED: {e}", file=sys.stderr)
+        raise SystemExit(1) from e
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
 
 
 def interleaved_medians(fns: Mapping[str, Callable[[], Any]], *,

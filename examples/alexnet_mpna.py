@@ -184,6 +184,33 @@ def main(argv=None) -> None:
     print(f"  bitwise-equal to the unbatched forward: "
           f"{bool(np.array_equal(np.asarray(one)[0], done[0].logits))}")
 
+    print("\n== dual-array pipelined serving (SA-CONV || SA-FC across "
+          "waves) ==")
+    srv_p = CNNServer("alexnet", params, in_res=67, width_mult=0.125,
+                      max_batch=2, pipeline=True)
+    srv_s = CNNServer("alexnet", params, in_res=67, width_mult=0.125,
+                      max_batch=2, pipeline=False)
+    for i in range(4):
+        img = rng.standard_normal((67, 67, 3)).astype(np.float32)
+        srv_p.submit(CNNRequest(uid=i, image=img.copy()))
+        srv_s.submit(CNNRequest(uid=i, image=img))
+    done_p, done_s = srv_p.run(), srv_s.run()
+    same = all(np.array_equal(a.logits, b.logits)
+               for a, b in zip(done_p, done_s))
+    w0 = srv_p.waves[0]
+    print(f"  {len(done_p)} requests in {len(srv_p.waves)} overlapped "
+          f"waves; wave 0 trace: {len(w0.conv_trace)} conv-stage + "
+          f"{len(w0.fc_trace)} fc-stage records (stage/wave tagged)")
+    print(f"  pipelined logits bitwise-equal sequential path: {same}")
+    for net in ("alexnet", "vgg16"):
+        m = PM.pipeline_makespan(net, batch=8, waves=8)
+        cs_us, fs_us = (v * 1e6 for v in PM.pipeline_stage_seconds(net, 8))
+        print(f"  {net:8s} b=8 waves=8: modeled makespan ratio "
+              f"{m.makespan_ratio:.3f}x (ASIC), stage roofline "
+              f"conv {cs_us:.0f}us / fc {fs_us:.0f}us, FC->CONV "
+              f"bottleneck crossover b="
+              f"{PM.tpu_pipeline_crossover_batch(net)}")
+
     print("\n== analytic: the paper's headline numbers ==")
     print(f"  Fig 12a  SA-FC speedup on FC : "
           f"{PM.fig12a_safc_speedup():.2f}x   (paper 8.1x)")

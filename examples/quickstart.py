@@ -18,7 +18,6 @@ from repro.core import dataflow, quant
 from repro.core.engine import DispatchPolicy, Engine
 from repro.core.schedule import LayerSchedule
 from repro.data.pipeline import DataConfig, SyntheticLM
-from repro.models import transformer as T
 from repro.train import train_step as TS
 
 CFG = ModelConfig(name="quick", family="dense", n_layers=2, d_model=64,

@@ -8,8 +8,8 @@ roofline target (TPU v5e) and for the paper's MPNA ASIC live in
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Any, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Layer-pattern vocabulary (heterogeneous stacks scan over a repeating block)

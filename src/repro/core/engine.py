@@ -87,6 +87,11 @@ class DispatchRecord:
     # the maxpool stage requested to ride this conv's flush epilogue; the
     # accepted/declined decision is conv_plan.fuse_pool
     pool: Optional[PoolSpec] = None
+    # dual-array pipeline tags (set via Engine.tagging): which pipeline
+    # stage issued this dispatch ('conv' | 'fc' | '') and which serving
+    # wave it belongs to (-1 = untagged)
+    stage: str = ""
+    wave: int = -1
 
     def __getitem__(self, key: str) -> Any:
         return getattr(self, key)
@@ -119,6 +124,14 @@ class DispatchTrace:
 
     def by_regime(self, regime: str) -> List[DispatchRecord]:
         return [r for r in self.records if r.regime == regime]
+
+    def by_stage(self, stage: str) -> List[DispatchRecord]:
+        """Records a given pipeline stage dispatched ('conv' | 'fc')."""
+        return [r for r in self.records if r.stage == stage]
+
+    def by_wave(self, wave: int) -> List[DispatchRecord]:
+        """Records a given serving wave dispatched."""
+        return [r for r in self.records if r.wave == wave]
 
     def counts(self) -> dict:
         out: dict = {}
@@ -516,12 +529,29 @@ class Engine:
             else:
                 self._trace_tls.trace = prev
 
+    @contextlib.contextmanager
+    def tagging(self, *, stage: str = "", wave: int = -1):
+        """Tag every record issued inside the context with the pipeline
+        stage ('conv' | 'fc') and serving wave that dispatched it — the
+        dual-array serving pipeline's provenance labels.  Per-thread and
+        re-entrant, like :meth:`tracing`."""
+        prev = getattr(self._trace_tls, "tags", None)
+        self._trace_tls.tags = (stage, wave)
+        try:
+            yield self
+        finally:
+            self._trace_tls.tags = prev
+
     def record(self, **kw: Any) -> None:
         """Append a :class:`DispatchRecord` to the live trace (no-op when
         not tracing).  Public for ops that execute outside ``matmul`` /
         ``attention`` but still belong in the dispatch picture (e.g. the
         MoE per-expert einsums)."""
         if self.trace is not None:
+            tags = getattr(self._trace_tls, "tags", None)
+            if tags is not None:
+                kw.setdefault("stage", tags[0])
+                kw.setdefault("wave", tags[1])
             self.trace.append(DispatchRecord(**kw))
 
     # internal alias

@@ -39,7 +39,6 @@ dominates, so the Fig. 12e ~51% saving tracks the traffic reduction.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass
 from typing import Iterable, List, Optional
 
@@ -124,6 +123,220 @@ def network_cycles(net: str, arr: SystolicArray, *,
         else:
             fc += fc_cycles_sa_conv(l, arr)
     return NetworkTiming(conv / n_conv_arrays, fc)
+
+
+# ---------------------------------------------------------------------------
+# dual-array pipelined serving: the two stages overlapped across waves.
+# The paper integrates SA-CONV and SA-FC "to jointly accelerate both the
+# CONV and the FC layers" — running them concurrently means wave i's FC
+# head (on SA-FC) executes while wave i+1's conv stack (on SA-CONV) is in
+# flight.  The makespan model below is the analytic twin of
+# repro.serve.cnn_server.CNNServer's pipelined run().
+# ---------------------------------------------------------------------------
+def conv_stage_cycles(net: str, batch: int = 1, *,
+                      mpna: MPNAConfig = MPNA_PAPER,
+                      double_buffer: bool = True) -> float:
+    """One wave's SA-CONV stage: every CONV layer of a ``batch``-sample
+    micro-batch on the weight-stationary array.  The weight tiles are
+    loaded once per wave (double-buffered) while the activation stream
+    scales with the batch — batch b streams b x M*N output pixels per
+    tile."""
+    arr = mpna.sa_conv
+    K, L = arr.rows, arr.cols
+    total = 0.0
+    for l in network_stats(net):
+        if l.kind != "conv":
+            continue
+        J = l.ofm[2]
+        CRS = l.weights // J
+        MN = l.ofm[0] * l.ofm[1]
+        tiles = _ceil(J, L) * _ceil(CRS, K)
+        refill = 0 if double_buffer else K
+        total += tiles * (batch * MN + K + L + refill)
+    return total
+
+
+def fc_stage_cycles(net: str, batch: int = 1, *,
+                    mpna: MPNAConfig = MPNA_PAPER,
+                    bw_limited: bool = True) -> float:
+    """One wave's SA-FC stage: the classifier head with the whole
+    micro-batch resident, each weight tile streamed from DRAM once per
+    wave (the batch-amortized dataflow).  A tile serves ``batch`` MAC
+    rows, so per-tile cycles are ``max(batch, stream)`` where ``stream``
+    is the DRAM-bound weight-replacement time — at batch 1 this is
+    exactly :func:`fc_cycles_sa_fc`."""
+    arr = mpna.sa_fc
+    K, L = arr.rows, arr.cols
+    stream = 1.0
+    if bw_limited:
+        need = K * L * mpna.weight_bytes
+        stream = max(1.0, need / mpna.dram_bytes_per_cycle)
+    total = 0.0
+    for l in network_stats(net):
+        if l.kind != "fc":
+            continue
+        tiles = _ceil(l.ofm[2], L) * _ceil(l.ifm[2], K)
+        total += tiles * max(float(batch), stream) + K + L
+    return total
+
+
+@dataclass(frozen=True)
+class PipelineMakespan:
+    """Overlapped vs. serial makespan of ``waves`` identical micro-batch
+    waves through the two-stage (SA-CONV -> SA-FC) pipeline."""
+    net: str
+    batch: int
+    waves: int
+    conv_cycles_per_wave: float
+    fc_cycles_per_wave: float
+
+    @property
+    def bottleneck(self) -> str:
+        """Which array paces the steady state ('sa_conv' | 'sa_fc')."""
+        return "sa_conv" if self.conv_cycles_per_wave >= \
+            self.fc_cycles_per_wave else "sa_fc"
+
+    @property
+    def serial_cycles(self) -> float:
+        """The sequential server: waves x (conv + fc)."""
+        return self.waves * (self.conv_cycles_per_wave
+                             + self.fc_cycles_per_wave)
+
+    @property
+    def pipelined_cycles(self) -> float:
+        """Fill (first conv) + drain (last fc) + one bottleneck-stage
+        term per steady-state wave."""
+        c, f = self.conv_cycles_per_wave, self.fc_cycles_per_wave
+        return c + f + (self.waves - 1) * max(c, f)
+
+    @property
+    def makespan_ratio(self) -> float:
+        """serial / pipelined — > 1 whenever there is anything to hide
+        (waves >= 2); -> 2 for balanced stages and many waves."""
+        return self.serial_cycles / self.pipelined_cycles
+
+    @property
+    def overlap_efficiency(self) -> float:
+        """Fraction of the non-bottleneck stage hidden under the
+        bottleneck per steady-state wave: min/max of the stage times
+        (1.0 = perfectly balanced arrays, -> 0 = one array dominates)."""
+        c, f = self.conv_cycles_per_wave, self.fc_cycles_per_wave
+        return min(c, f) / max(c, f)
+
+
+def pipeline_makespan(net: str, batch: int = 1, waves: int = 8, *,
+                      mpna: MPNAConfig = MPNA_PAPER,
+                      double_buffer: bool = True,
+                      bw_limited: bool = True) -> PipelineMakespan:
+    """Analytic makespan of serving ``waves`` micro-batches of ``batch``
+    images through the dual-array pipeline vs. strictly sequentially —
+    overlapped makespan = fill + drain + sum over steady-state waves of
+    max(conv_cycles, fc_cycles), against the serial sum."""
+    if waves < 1:
+        raise ValueError(f"waves must be >= 1, got {waves}")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return PipelineMakespan(
+        net, batch, waves,
+        conv_stage_cycles(net, batch, mpna=mpna,
+                          double_buffer=double_buffer),
+        fc_stage_cycles(net, batch, mpna=mpna, bw_limited=bw_limited))
+
+
+def pipeline_stage_seconds(net: str, batch: int = 1, *,
+                           in_res: Optional[int] = None, in_ch: int = 3,
+                           bytes_in: int = 4, bytes_w: Optional[int] = None,
+                           chip: TPUChip = TPU_V5E,
+                           vmem_budget: Optional[int] = None
+                           ) -> tuple[float, float]:
+    """(conv stage seconds, fc stage seconds) for one micro-batch wave on
+    the TPU roofline — each stage bounded by max(compute, memory) over
+    the planner's own per-layer plans (:func:`pallas_conv_traffic` /
+    :func:`pallas_fc_traffic`), i.e. what the stage schedules commit to.
+    This is the framework-side stage-time model the pipelined
+    ``CNNServer`` overlaps: at b=1 the FC weight stream dominates both
+    paper nets (AlexNet's 224 MiB head most of all) while the conv stage
+    grows ~linearly with the batch — their crossing is the plannable
+    bottleneck flip :func:`tpu_pipeline_crossover_batch` pins."""
+    kw = dict(in_res=in_res, in_ch=in_ch, bytes_in=bytes_in,
+              bytes_w=bytes_w, chip=chip, vmem_budget=vmem_budget)
+    conv_fl = conv_hbm = 0.0
+    for row in pallas_conv_traffic(net, batch=batch, **kw):
+        conv_fl += row.plan.flops
+        conv_hbm += row.plan.hbm_bytes
+    fc_fl = fc_hbm = 0.0
+    for frow in pallas_fc_traffic(net, batch=batch, **kw):
+        fc_fl += frow.plan.flops
+        fc_hbm += frow.plan.hbm_bytes
+    conv_s = max(conv_fl / chip.peak_flops_bf16, conv_hbm / chip.hbm_bandwidth)
+    fc_s = max(fc_fl / chip.peak_flops_bf16, fc_hbm / chip.hbm_bandwidth)
+    return conv_s, fc_s
+
+
+def tpu_pipeline_crossover_batch(net: str, *,
+                                 in_res: Optional[int] = None,
+                                 in_ch: int = 3, bytes_in: int = 4,
+                                 bytes_w: Optional[int] = None,
+                                 chip: TPUChip = TPU_V5E,
+                                 vmem_budget: Optional[int] = None,
+                                 max_batch: int = 4096) -> int:
+    """Smallest micro-batch at which the conv stage overtakes the FC
+    stage as the pipeline bottleneck on the TPU roofline — a plannable,
+    pinnable quantity like the SA-FC plan's ``flip_batch``.  Below it the
+    wave is FC-bound (the weight stream of the head paces the pipeline;
+    batching amortizes it), above it CONV-bound.  AlexNet's 58.6M-weight
+    head keeps it FC-bound to a much larger batch than VGG-16, whose
+    15.3B-MAC conv stack flips the bottleneck within a handful of
+    samples."""
+    kw = dict(in_res=in_res, in_ch=in_ch, bytes_in=bytes_in,
+              bytes_w=bytes_w, chip=chip, vmem_budget=vmem_budget)
+
+    def conv_bound(b: int) -> bool:
+        c, f = pipeline_stage_seconds(net, b, **kw)
+        return c >= f
+
+    lo, hi = 1, max_batch
+    if conv_bound(lo):
+        return lo
+    if not conv_bound(hi):
+        return hi
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if conv_bound(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
+
+
+def pipeline_crossover_batch(net: str, *, mpna: MPNAConfig = MPNA_PAPER,
+                             max_batch: int = 1 << 16) -> int:
+    """The plannable micro-batch at which the pipeline's bottleneck flips
+    from SA-FC to SA-CONV (the pipeline twin of the SA-FC plan's
+    ``flip_batch``): conv-stage cycles grow ~linearly with the batch
+    while the weight-stream-bound FC stage stays flat until the batch
+    exceeds the per-tile stream time — AlexNet's head-heavy ratio makes
+    it FC-bound at b=1, VGG-16 is CONV-bound from b=1.  Returns the
+    smallest batch where the conv stage is the bottleneck (1 if it
+    already is; ``max_batch`` if SA-FC stays the bottleneck throughout —
+    not reachable for any paper network)."""
+    lo, hi = 1, max_batch
+
+    def conv_bound(b: int) -> bool:
+        return conv_stage_cycles(net, b, mpna=mpna) >= \
+            fc_stage_cycles(net, b, mpna=mpna)
+
+    if conv_bound(lo):
+        return lo
+    if not conv_bound(hi):
+        return hi
+    while hi - lo > 1:                    # conv/fc cycles are monotone in b
+        mid = (lo + hi) // 2
+        if conv_bound(mid):
+            hi = mid
+        else:
+            lo = mid
+    return hi
 
 
 # ---------------------------------------------------------------------------

@@ -21,9 +21,7 @@ to per-chip wire bytes with the standard ring-algorithm factors:
 from __future__ import annotations
 
 import dataclasses
-import math
 import re
-from collections import Counter
 from typing import Dict, Optional
 
 from repro.core.accelerator import TPU_V5E, TPUChip
@@ -510,6 +508,43 @@ def fused_pool_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
         out[key.name] = {"fused_bytes": fused, "unfused_bytes": unfused,
                          "saving_bytes": unfused - fused}
     return out
+
+
+def pipeline_overlap_from_schedule(conv_schedule, fc_schedule, *,
+                                   waves: int = 1,
+                                   chip: TPUChip = TPU_V5E) -> Dict:
+    """Dual-array pipeline overlap report from the two compiled stage
+    schedules (:meth:`repro.core.schedule.LayerSchedule.compile_cnn_stages`):
+    per-stage roofline-bounded seconds (max of compute and HBM terms over
+    the stage's committed plans), which array is the wave bottleneck, the
+    per-wave overlap efficiency (fraction of the non-bottleneck stage
+    hidden under the bottleneck), and the serial-vs-pipelined makespan
+    ratio for ``waves`` identical waves — the schedule-side twin of
+    :func:`repro.core.perf_model.pipeline_makespan`, computed from the
+    exact plans the pipelined server executes."""
+    conv = terms_from_schedule(conv_schedule)
+    fc = terms_from_schedule(fc_schedule)
+    conv_s, fc_s = conv.bound_s(chip), fc.bound_s(chip)
+    top, bot = max(conv_s, fc_s), min(conv_s, fc_s)
+    serial_s = waves * (conv_s + fc_s)
+    pipelined_s = conv_s + fc_s + (waves - 1) * top
+    return {
+        "waves": waves,
+        "conv_stage": {"seconds": conv_s,
+                       "flops": conv.flops_per_chip,
+                       "hbm_bytes": conv.hbm_bytes_per_chip,
+                       "bound": conv.dominant(chip)[0]},
+        "fc_stage": {"seconds": fc_s,
+                     "flops": fc.flops_per_chip,
+                     "hbm_bytes": fc.hbm_bytes_per_chip,
+                     "bound": fc.dominant(chip)[0]},
+        "bottleneck": "sa_conv" if conv_s >= fc_s else "sa_fc",
+        "overlap_efficiency": (bot / top) if top > 0 else 0.0,
+        "serial_s": serial_s,
+        "pipelined_s": pipelined_s,
+        "makespan_ratio": (serial_s / pipelined_s) if pipelined_s > 0
+        else 1.0,
+    }
 
 
 def fc_batch_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:

@@ -35,6 +35,13 @@ from repro.core.engine import DispatchPolicy, Engine
 
 PHASES = ("train", "prefill", "decode")
 
+#: Pipeline stages :meth:`LayerSchedule.compile_cnn` can compile for: the
+#: full network, the SA-CONV stage (conv+fused-pool stack -> flattened
+#: features) or the SA-FC stage (classifier head).  The stage schedules
+#: partition the full schedule — the dual-array serving pipeline runs one
+#: engine per stage.
+CNN_STAGES = ("full", "conv", "fc")
+
 
 @dataclass(frozen=True)
 class OpKey:
@@ -216,7 +223,8 @@ class LayerSchedule(Mapping):
                     width_mult: float = 1.0,
                     dtype=jnp.float32,
                     policy: Optional[DispatchPolicy] = None,
-                    params: Optional[Any] = None) -> "LayerSchedule":
+                    params: Optional[Any] = None,
+                    stage: str = "full") -> "LayerSchedule":
         """Compile (and memoize) the inference schedule for a CNN from
         :data:`repro.models.cnn.NETWORKS` — the paper's per-layer offline
         schedule (Sec. V) for its own workloads: every CONV gets a
@@ -227,19 +235,41 @@ class LayerSchedule(Mapping):
         :class:`~repro.core.dataflow.MatmulPlan` when forced to
         SA-CONV).  An engine carrying the
         result resolves each layer by lookup (``schedule="hit"``) instead
-        of re-planning at trace time."""
+        of re-planning at trace time.
+
+        ``stage`` compiles one pipeline stage of the dual-array serving
+        path instead of the whole network: ``"conv"`` abstract-traces
+        :func:`~repro.models.cnn.cnn_conv_stage` (the conv+fused-pool
+        stack feeding the stage hand-off buffer), ``"fc"``
+        :func:`~repro.models.cnn.cnn_fc_stage` (the classifier head on
+        the flattened features).  The two stage schedules partition the
+        ``"full"`` schedule exactly — same op keys, same plans — so a
+        pipelined server resolves every dispatch by lookup just like the
+        sequential one (see :meth:`compile_cnn_stages`)."""
+        if stage not in CNN_STAGES:
+            raise ValueError(f"stage must be one of {CNN_STAGES}, "
+                             f"got {stage!r}")
         if policy is None:
             policy = DispatchPolicy()
         key = ("cnn", net, batch, in_res, in_ch, width_mult,
-               str(jnp.dtype(dtype)), policy, _params_fingerprint(params))
+               str(jnp.dtype(dtype)), policy, _params_fingerprint(params),
+               stage)
         hit = _CACHE.get(key)
         if hit is not None:
             return hit
         sched = cls("infer", policy,
                     *_collect_cnn(net, batch, in_res, in_ch, width_mult,
-                                  dtype, policy, params))
+                                  dtype, policy, params, stage))
         _CACHE[key] = sched
         return sched
+
+    @classmethod
+    def compile_cnn_stages(cls, net: str, **kw: Any
+                           ) -> Tuple["LayerSchedule", "LayerSchedule"]:
+        """(conv-stage schedule, fc-stage schedule) for the dual-array
+        serving pipeline — same arguments as :meth:`compile_cnn`."""
+        return (cls.compile_cnn(net, stage="conv", **kw),
+                cls.compile_cnn(net, stage="fc", **kw))
 
 
 _CACHE: Dict[Tuple, LayerSchedule] = {}
@@ -279,10 +309,14 @@ def _entries_from_trace(tr) -> Tuple[Dict[OpKey, MatmulPlan],
 
 
 def _collect_cnn(net: str, batch: int, in_res: Optional[int], in_ch: int,
-                 width_mult: float, dtype, policy: DispatchPolicy, params
+                 width_mult: float, dtype, policy: DispatchPolicy, params,
+                 stage: str = "full"
                  ) -> Tuple[Dict[OpKey, MatmulPlan],
                             Dict[ConvOpKey, ConvPlan]]:
-    """Abstract-trace one CNN forward under a collecting engine."""
+    """Abstract-trace one CNN forward (or one pipeline stage) under a
+    collecting engine.  The ``"fc"`` stage traces the classifier head on
+    the conv stage's hand-off shape (the flattened features), derived by
+    a trace-free abstract eval of the conv stage."""
     from repro.models import cnn
 
     _, res0 = cnn.NETWORKS[net]
@@ -292,11 +326,18 @@ def _collect_cnn(net: str, batch: int, in_res: Optional[int], in_ch: int,
             lambda: cnn.init_cnn(net, jax.random.PRNGKey(0), in_res=res,
                                  in_ch=in_ch, width_mult=width_mult,
                                  dtype=dtype))
+    x = jax.ShapeDtypeStruct((batch, res, res, in_ch), jnp.dtype(dtype))
+    if stage == "fc":
+        # hand-off buffer shape, computed without recording conv dispatches
+        feats_eng = Engine(backend="xla", policy=policy)
+        x = jax.eval_shape(
+            lambda pr, xv: cnn.cnn_conv_stage(net, pr, xv, eng=feats_eng),
+            params, x)
+    fn = {"full": cnn.cnn_forward, "conv": cnn.cnn_conv_stage,
+          "fc": cnn.cnn_fc_stage}[stage]
     eng = Engine(backend="xla", policy=policy)
     with eng.tracing() as tr, eng.activate():
-        x = jax.ShapeDtypeStruct((batch, res, res, in_ch), jnp.dtype(dtype))
-        jax.eval_shape(lambda pr, xv: cnn.cnn_forward(net, pr, xv, eng=eng),
-                       params, x)
+        jax.eval_shape(lambda pr, xv: fn(net, pr, xv, eng=eng), params, x)
     return _entries_from_trace(tr)
 
 

@@ -11,7 +11,7 @@ logical scale) in tests/test_elastic.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)

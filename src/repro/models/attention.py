@@ -16,7 +16,6 @@ import jax.numpy as jnp
 
 from repro.core import engine
 from repro.distributed.sharding import constrain
-from repro.kernels.ref import repeat_kv
 from repro.models.layers import dense_init, rope
 
 

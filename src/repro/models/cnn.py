@@ -193,6 +193,74 @@ def init_cnn(name: str, key, *, in_res: Optional[int] = None, in_ch: int = 3,
     return params
 
 
+def conv_stage_len(name: str) -> int:
+    """Number of spec/param entries in the CONV stage (everything before
+    the first FC layer) — the stage boundary of the dual-array pipeline."""
+    spec, _ = NETWORKS[name]
+    for i, s in enumerate(spec):
+        if s.kind == "fc":
+            return i
+    return len(spec)
+
+
+def cnn_conv_stage(name: str, params: list, x: jax.Array, *,
+                   backend: str = "pallas", interpret: bool = True,
+                   eng: Optional[engine.Engine] = None) -> jax.Array:
+    """The SA-CONV stage of the dual-array pipeline: the conv+fused-pool
+    stack, ``(N, H, W, C) -> (N, features)`` flattened for the classifier
+    head.  Dispatch-for-dispatch identical to the CONV prefix of
+    :func:`cnn_forward` (same op names ``conv1..``/``pool1..``, same fused
+    conv+pool pairing), so a compiled conv-stage schedule resolves every
+    layer by lookup and the composition with :func:`cnn_fc_stage` is
+    bitwise the full forward."""
+    spec, _ = NETWORKS[name]
+    if eng is None:
+        eng = engine.current().with_(backend=backend, interpret=interpret)
+    end = conv_stage_len(name)
+    ci = pi = 0
+    i = 0
+    while i < end:
+        s, p = spec[i], params[i]
+        if s.kind == "conv":
+            ci += 1
+            nxt = spec[i + 1] if i + 1 < len(spec) else None
+            if nxt is not None and nxt.kind == "pool":
+                x = eng.conv2d(x, p["f"], p["b"], stride=s.stride,
+                               pad=s.pad, act=s.act,
+                               pool=PoolSpec(nxt.kernel, nxt.stride),
+                               name=f"conv{ci}")
+                pi += 1
+                i += 2
+                continue
+            x = eng.conv2d(x, p["f"], p["b"], stride=s.stride, pad=s.pad,
+                           act=s.act, name=f"conv{ci}")
+        else:                                       # standalone pool
+            pi += 1
+            x = eng.pool(x, window=s.kernel, stride=s.stride,
+                         name=f"pool{pi}")
+        i += 1
+    return x.reshape(x.shape[0], -1)
+
+
+def cnn_fc_stage(name: str, params: list, feats: jax.Array, *,
+                 backend: str = "pallas", interpret: bool = True,
+                 eng: Optional[engine.Engine] = None) -> jax.Array:
+    """The SA-FC stage of the dual-array pipeline: the classifier head,
+    ``(N, features) -> logits``.  Consumes the hand-off buffer
+    :func:`cnn_conv_stage` produces; op names ``fc1..`` match the FC
+    suffix of :func:`cnn_forward` exactly, so the batch-amortized FCPlans
+    resolve from a compiled fc-stage schedule unchanged."""
+    spec, _ = NETWORKS[name]
+    if eng is None:
+        eng = engine.current().with_(backend=backend, interpret=interpret)
+    start = conv_stage_len(name)
+    x = feats
+    for fi, (s, p) in enumerate(zip(spec[start:], params[start:]), start=1):
+        x = x.reshape(x.shape[0], -1)
+        x = eng.matmul(x, p["w"], p["b"], act=s.act, name=f"fc{fi}")
+    return x
+
+
 def cnn_forward(name: str, params: list, x: jax.Array, *,
                 backend: str = "pallas", interpret: bool = True,
                 eng: Optional[engine.Engine] = None) -> jax.Array:
@@ -214,34 +282,13 @@ def cnn_forward(name: str, params: list, x: jax.Array, *,
     reaches HBM (the paper's Fig. 7 pipeline); when the plan declines the
     engine itself falls back to conv + standalone pool.  Pools not
     preceded by a conv dispatch through ``eng.pool`` so they too appear in
-    the trace/schedule."""
-    spec, _ = NETWORKS[name]
+    the trace/schedule.
+
+    The forward IS the composition of the two pipeline stages
+    (:func:`cnn_conv_stage` -> :func:`cnn_fc_stage`) — the dual-array
+    serving pipeline overlaps them across waves without changing any
+    per-request math."""
     if eng is None:
         eng = engine.current().with_(backend=backend, interpret=interpret)
-    ci = fi = pi = 0
-    i = 0
-    while i < len(spec):
-        s, p = spec[i], params[i]
-        if s.kind == "conv":
-            ci += 1
-            nxt = spec[i + 1] if i + 1 < len(spec) else None
-            if nxt is not None and nxt.kind == "pool":
-                x = eng.conv2d(x, p["f"], p["b"], stride=s.stride,
-                               pad=s.pad, act=s.act,
-                               pool=PoolSpec(nxt.kernel, nxt.stride),
-                               name=f"conv{ci}")
-                pi += 1
-                i += 2
-                continue
-            x = eng.conv2d(x, p["f"], p["b"], stride=s.stride, pad=s.pad,
-                           act=s.act, name=f"conv{ci}")
-        elif s.kind == "pool":
-            pi += 1
-            x = eng.pool(x, window=s.kernel, stride=s.stride,
-                         name=f"pool{pi}")
-        else:
-            fi += 1
-            x = x.reshape(x.shape[0], -1)
-            x = eng.matmul(x, p["w"], p["b"], act=s.act, name=f"fc{fi}")
-        i += 1
-    return x
+    feats = cnn_conv_stage(name, params, x, eng=eng)
+    return cnn_fc_stage(name, params, feats, eng=eng)

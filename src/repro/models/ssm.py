@@ -9,7 +9,7 @@ Validated against the naive recurrence oracle ``repro.kernels.ref.ssd``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

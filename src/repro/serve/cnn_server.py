@@ -1,5 +1,5 @@
 """Micro-batch coalescing CNN server — batched image serving on the
-batch-amortized SA-FC dataflow.
+batch-amortized SA-FC dataflow, pipelined across the two arrays.
 
 The paper's SA-FC array only wins when each streamed weight byte is
 amortized across a batch of samples: per-sample FC weight reuse is 1
@@ -13,20 +13,27 @@ per request.  This server is the CNN analogue of
   (:attr:`~repro.core.dataflow.FCPlan.bb`) the policy's VMEM budget
   affords the dominant FC layer, i.e. exactly the number of samples one
   weight pass can serve;
-* each admission wave runs the whole conv+pool+FC network as ONE
-  engine-dispatched forward under a memoized batch-variant
-  :meth:`~repro.core.schedule.LayerSchedule.compile_cnn` schedule (the
-  paper's offline per-layer table, compiled once per wave shape);
-* per-request outputs are bitwise equal to the unbatched forward whenever
-  the batch variants plan the same tiles: rows are independent in every
-  kernel (the conv/pool grids carry batch as a grid dimension and the
-  SA-FC kernel contracts each sample's row independently), so batching
-  changes *traffic*, never *math*.
+* each admission wave runs as TWO pipeline stages under memoized
+  stage-split :meth:`~repro.core.schedule.LayerSchedule.compile_cnn`
+  schedules: the SA-CONV stage (conv+fused-pool stack -> flattened
+  features, the stage hand-off buffer) and the SA-FC stage (classifier
+  head on the buffered features);
+* **dual-array pipelining** (the paper's joint execution: both arrays
+  busy at once): wave *i*'s FC head is dispatched and completed while
+  wave *i+1*'s conv stack is already in flight — the conv stage of the
+  next wave is enqueued (JAX async dispatch) *before* the previous
+  wave's FC stage is drained, so on an asynchronous backend the SA-CONV
+  and SA-FC work overlap.  ``pipeline=False`` (or ``run(pipelined=
+  False)``) keeps the strictly sequential order for A/B;
+* per-request outputs are **bitwise equal** on both paths and to the
+  unbatched forward: the stages run the same kernels under the same
+  plans in the same per-wave order — pipelining changes *when* a stage
+  is waited on, never what it computes.
 
 Every wave's :class:`~repro.core.engine.DispatchTrace` is kept on the
-:class:`WaveReport` — each FC layer shows up there carrying its
-:class:`~repro.core.dataflow.FCPlan`, the serving-side twin of the
-schedule table.
+:class:`WaveReport`, with each record tagged by the pipeline stage and
+wave that dispatched it (``stage='conv'|'fc'``, ``wave=i``) — the
+serving-side twin of the stage-split schedule tables.
 """
 from __future__ import annotations
 
@@ -51,11 +58,18 @@ class CNNRequest:
 
 @dataclasses.dataclass(frozen=True)
 class WaveReport:
-    """What one coalesced dispatch did: who rode it, how it resolved."""
+    """What one coalesced dispatch did: who rode it, how it resolved.
+
+    ``trace`` is the wave's full dispatch picture (conv stage then FC
+    stage, every record stage/wave-tagged); ``conv_trace``/``fc_trace``
+    are the per-stage views the pipeline hands between arrays."""
     uids: Tuple[int, ...]
     batch: int
     schedule_hits: int
     trace: DispatchTrace
+    wave: int = 0
+    conv_trace: Optional[DispatchTrace] = None
+    fc_trace: Optional[DispatchTrace] = None
 
     @property
     def fc_records(self):
@@ -63,18 +77,36 @@ class WaveReport:
         return [r for r in self.trace if r.fc_plan is not None]
 
 
+@dataclasses.dataclass
+class _StageBuffer:
+    """The explicit hand-off buffer between the two pipeline stages: one
+    wave's requests plus its in-flight conv-stage output (flattened
+    features, NOT blocked on) and the conv-stage trace."""
+    wave: int
+    requests: List[CNNRequest]
+    feats: object                         # jax.Array, possibly in flight
+    conv_trace: DispatchTrace
+
+
 class CNNServer:
-    """Admit single images, dispatch planner-sized micro-batches.
+    """Admit single images, dispatch planner-sized micro-batches through
+    the dual-array two-stage pipeline.
 
     ``max_batch`` caps admission; the actual micro-batch is the planner's
     resident batch tile for the network's dominant FC layer under the
     engine's policy (a tight ``vmem_budget`` shrinks it — the server
-    admits exactly what one weight pass can amortize over)."""
+    admits exactly what one weight pass can amortize over).
+
+    ``pipeline`` selects the default :meth:`run` mode: ``True`` overlaps
+    wave *i*'s SA-FC stage with wave *i+1*'s SA-CONV stage (the paper's
+    joint dual-array execution), ``False`` drains each wave's two stages
+    back-to-back.  Logits are bitwise identical either way."""
 
     def __init__(self, net: str, params: list, *,
                  in_res: Optional[int] = None, in_ch: int = 3,
                  width_mult: float = 1.0, max_batch: int = 64,
                  dtype=jnp.float32,
+                 pipeline: bool = True,
                  engine: Optional[Engine] = None) -> None:
         from repro.models import cnn
         spec, res0 = cnn.NETWORKS[net]
@@ -85,11 +117,13 @@ class CNNServer:
         self.width_mult = width_mult
         self.max_batch = max_batch
         self.dtype = jnp.dtype(dtype)
+        self.pipeline = pipeline
         self.engine = engine if engine is not None \
             else Engine(backend="pallas", interpret=True)
         self.microbatch = self._preferred_microbatch()
         self.queue: List[CNNRequest] = []
         self.waves: List[WaveReport] = []
+        self._wave_counter = 0
 
     # -- planning -----------------------------------------------------------
     def _fc_shapes(self) -> List[Tuple[int, int]]:
@@ -111,8 +145,9 @@ class CNNServer:
                                           regime="sa_fc")
         return max(1, min(self.max_batch, plan.bb))
 
-    def _schedule(self, batch: int) -> LayerSchedule:
-        return LayerSchedule.compile_cnn(
+    def _stage_schedules(self, batch: int
+                         ) -> Tuple[LayerSchedule, LayerSchedule]:
+        return LayerSchedule.compile_cnn_stages(
             self.net, batch=batch, in_res=self.in_res, in_ch=self.in_ch,
             width_mult=self.width_mult, dtype=self.dtype,
             policy=self.engine.policy, params=self.params)
@@ -125,26 +160,68 @@ class CNNServer:
                              f"{tuple(req.image.shape)} != server {shape}")
         self.queue.append(req)
 
-    def run(self) -> List[CNNRequest]:
-        """Drain the queue in planner-preferred micro-batches; returns the
-        completed requests."""
+    def _conv_stage_dispatch(self, wave_idx: int,
+                             wave: List[CNNRequest]) -> _StageBuffer:
+        """Stage 1 (SA-CONV array): dispatch the conv+fused-pool stack of
+        one wave and hand the (possibly still in-flight) flattened
+        features to the stage buffer — no blocking here, so the next
+        stage can be issued while this one runs."""
         from repro.models import cnn
+        x = jnp.stack([jnp.asarray(r.image, self.dtype) for r in wave])
+        conv_sched, _ = self._stage_schedules(len(wave))
+        eng = self.engine.with_schedule(conv_sched)
+        with eng.tracing() as tr, eng.tagging(stage="conv", wave=wave_idx):
+            feats = cnn.cnn_conv_stage(self.net, self.params, x, eng=eng)
+        return _StageBuffer(wave_idx, list(wave), feats, tr)
+
+    def _fc_stage_complete(self, buf: _StageBuffer) -> List[CNNRequest]:
+        """Stage 2 (SA-FC array): run the classifier head on the buffered
+        features, block, deliver logits, and file the WaveReport."""
+        from repro.models import cnn
+        _, fc_sched = self._stage_schedules(len(buf.requests))
+        eng = self.engine.with_schedule(fc_sched)
+        with eng.tracing() as tr, eng.tagging(stage="fc", wave=buf.wave):
+            logits = cnn.cnn_fc_stage(self.net, self.params, buf.feats,
+                                      eng=eng)
+        logits = np.asarray(logits)                   # the pipeline barrier
+        for i, r in enumerate(buf.requests):
+            r.logits = logits[i]
+            r.done = True
+        combined = DispatchTrace()
+        for rec in list(buf.conv_trace) + list(tr):
+            combined.append(rec)
+        self.waves.append(WaveReport(
+            uids=tuple(r.uid for r in buf.requests),
+            batch=len(buf.requests),
+            schedule_hits=sum(r.schedule == "hit" for r in combined),
+            trace=combined, wave=buf.wave,
+            conv_trace=buf.conv_trace, fc_trace=tr))
+        return buf.requests
+
+    def run(self, *, pipelined: Optional[bool] = None) -> List[CNNRequest]:
+        """Drain the queue in planner-preferred micro-batches; returns the
+        completed requests.
+
+        Pipelined (default, per ``self.pipeline``): wave *i+1*'s conv
+        stage is dispatched BEFORE wave *i*'s FC stage is drained, so the
+        SA-FC work of one wave overlaps the SA-CONV work of the next —
+        one stage buffer deep, the paper's two-array occupancy.
+        Sequential: each wave's two stages complete back-to-back.  The
+        per-request logits are bitwise identical in both modes."""
+        pipelined = self.pipeline if pipelined is None else pipelined
         finished: List[CNNRequest] = []
+        inflight: Optional[_StageBuffer] = None
         while self.queue:
             wave = self.queue[:self.microbatch]
             self.queue = self.queue[len(wave):]
-            x = jnp.stack([jnp.asarray(r.image, self.dtype) for r in wave])
-            sched = self._schedule(len(wave))
-            eng = self.engine.with_schedule(sched)
-            with eng.tracing() as tr:
-                logits = cnn.cnn_forward(self.net, self.params, x, eng=eng)
-            logits = np.asarray(logits)
-            for i, r in enumerate(wave):
-                r.logits = logits[i]
-                r.done = True
-                finished.append(r)
-            self.waves.append(WaveReport(
-                uids=tuple(r.uid for r in wave), batch=len(wave),
-                schedule_hits=sum(r.schedule == "hit" for r in tr),
-                trace=tr))
+            buf = self._conv_stage_dispatch(self._wave_counter, wave)
+            self._wave_counter += 1
+            if inflight is not None:
+                finished.extend(self._fc_stage_complete(inflight))
+            inflight = buf
+            if not pipelined:
+                finished.extend(self._fc_stage_complete(inflight))
+                inflight = None
+        if inflight is not None:
+            finished.extend(self._fc_stage_complete(inflight))
         return finished

@@ -26,8 +26,6 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.engine import Engine
 from repro.core.schedule import LayerSchedule
-from repro.models import transformer as T
-from repro.serve import kvcache as KC
 from repro.serve.serve_step import decode_step, prefill_step
 
 

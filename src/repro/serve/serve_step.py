@@ -7,7 +7,7 @@ full-prompt forward emitting next-token logits + the cache.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -16,8 +16,7 @@ case by memoized lookup instead of re-planning at trace time.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Tuple
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

@@ -14,10 +14,9 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Optional
+from typing import Callable, Optional
 
 import jax
-import numpy as np
 
 from repro.checkpoint.checkpoint import Checkpointer
 from repro.configs.base import ModelConfig, TrainConfig

@@ -1,0 +1,106 @@
+"""The planner-regression CI gate: deterministic-field extraction and
+structural diffing of the BENCH_*.json artifacts (benchmarks/check_bench.py
+is a script, loaded here by path)."""
+from __future__ import annotations
+
+import copy
+import importlib.util
+import json
+import os
+
+import pytest
+
+_CB_PATH = os.path.join(os.path.dirname(__file__), os.pardir,
+                        "benchmarks", "check_bench.py")
+
+
+@pytest.fixture(scope="module")
+def cb():
+    spec = importlib.util.spec_from_file_location("check_bench", _CB_PATH)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+@pytest.fixture()
+def pipeline_doc():
+    return {
+        "bench": "pipeline_serve", "tier": "fast",
+        "modeled": {
+            "nets": {"alexnet": {
+                "mixes": [{"batch": 8, "waves": 8,
+                           "tpu": {"makespan_ratio": 1.248899}}],
+                "crossover_batch": {"tpu_fp32": 29, "tpu_int8_w": 8},
+            }},
+        },
+        "headline": {"alexnet_tpu_makespan_ratio_b8w8": 1.248899,
+                     "vgg16_tpu_makespan_ratio_b8w8": 1.41,
+                     "crossover_batch_tpu_fp32": {"alexnet": 29,
+                                                  "vgg16": 5},
+                     "wall_ratio": 0.92},
+        "wall": [{"wall_ratio": 0.92}],
+    }
+
+
+def _write(tmp_path, name, doc):
+    p = tmp_path / name
+    p.write_text(json.dumps(doc))
+    return str(p)
+
+
+def test_identical_artifacts_pass(cb, tmp_path, pipeline_doc):
+    base = _write(tmp_path, "base.json", pipeline_doc)
+    fresh = _write(tmp_path, "fresh.json", pipeline_doc)
+    assert cb.check_pair(base, fresh, cb._pipeline_fields) == []
+
+
+def test_wall_noise_is_ignored(cb, tmp_path, pipeline_doc):
+    """Wall-clock fields are not deterministic and must not gate."""
+    noisy = copy.deepcopy(pipeline_doc)
+    noisy["wall"][0]["wall_ratio"] = 3.0
+    noisy["headline"]["wall_ratio"] = 3.0
+    base = _write(tmp_path, "base.json", pipeline_doc)
+    fresh = _write(tmp_path, "fresh.json", noisy)
+    assert cb.check_pair(base, fresh, cb._pipeline_fields) == []
+
+
+def test_planner_drift_is_caught(cb, tmp_path, pipeline_doc):
+    drifted = copy.deepcopy(pipeline_doc)
+    drifted["modeled"]["nets"]["alexnet"]["crossover_batch"]["tpu_fp32"] = 7
+    base = _write(tmp_path, "base.json", pipeline_doc)
+    fresh = _write(tmp_path, "fresh.json", drifted)
+    diffs = cb.check_pair(base, fresh, cb._pipeline_fields)
+    assert len(diffs) == 1 and "tpu_fp32" in diffs[0]
+
+
+def test_missing_baseline_key_is_a_regression(cb, tmp_path, pipeline_doc):
+    shrunk = copy.deepcopy(pipeline_doc)
+    del shrunk["modeled"]["nets"]["alexnet"]["crossover_batch"]
+    base = _write(tmp_path, "base.json", pipeline_doc)
+    fresh = _write(tmp_path, "fresh.json", shrunk)
+    diffs = cb.check_pair(base, fresh, cb._pipeline_fields)
+    assert any("missing" in d for d in diffs)
+
+
+def test_float_jitter_within_rtol_passes(cb, tmp_path, pipeline_doc):
+    jittered = copy.deepcopy(pipeline_doc)
+    jittered["headline"]["alexnet_tpu_makespan_ratio_b8w8"] *= \
+        1 + 1e-12                                    # libm-scale wiggle
+    base = _write(tmp_path, "base.json", pipeline_doc)
+    fresh = _write(tmp_path, "fresh.json", jittered)
+    assert cb.check_pair(base, fresh, cb._pipeline_fields) == []
+    jittered["headline"]["alexnet_tpu_makespan_ratio_b8w8"] = 1.3
+    fresh = _write(tmp_path, "fresh2.json", jittered)
+    assert cb.check_pair(base, fresh, cb._pipeline_fields) != []
+
+
+def test_real_artifacts_self_consistent(cb):
+    """The committed baselines pass the gate against themselves, and the
+    extractors find deterministic fields in each."""
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    for name, extract in cb.ARTIFACTS.items():
+        path = os.path.join(root, name)
+        assert os.path.exists(path), f"committed baseline {name} missing"
+        fields = extract(json.load(open(path)))
+        assert fields, f"{name}: extractor found nothing to gate"
+        assert cb.check_pair(path, path, extract) == []

@@ -16,7 +16,7 @@ from repro.core import engine
 from repro.distributed.pipeline import PipeSchedule
 from repro.models import transformer as T
 from repro.serve import kvcache as KC
-from repro.serve.serve_step import decode_step, prefill_step
+from repro.serve.serve_step import decode_step
 
 CFG = ModelConfig(name="disp", family="dense", n_layers=2, d_model=512,
                   n_heads=8, n_kv_heads=4, d_ff=2048, vocab_size=8192,

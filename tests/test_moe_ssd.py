@@ -9,7 +9,7 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 import repro.models.moe as M
-from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
+from repro.configs.base import ModelConfig, MoEConfig
 from repro.kernels import ref
 from repro.models.ssm import ssd_chunked
 

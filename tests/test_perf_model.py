@@ -1,10 +1,8 @@
 """Faithful-reproduction asserts: the MPNA paper's own claims."""
 from __future__ import annotations
 
-import pytest
-
 from repro.core import perf_model as PM
-from repro.core.accelerator import MPNA_PAPER, SystolicArray
+from repro.core.accelerator import SystolicArray
 from repro.models.cnn import network_stats
 
 

@@ -4,12 +4,9 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
-
 from repro.configs.base import ModelConfig
 from repro.core import engine, quant
 from repro.models import transformer as T
-from repro.serve import kvcache as KC
 from repro.serve.serve_step import decode_step, prefill_step
 
 CFG = ModelConfig(name="q", family="dense", n_layers=2, d_model=128,
