@@ -36,10 +36,10 @@ import jax.numpy as jnp
 
 try:                                    # package import (benchmarks.run)
     from benchmarks.timing import interleaved_medians, \
-        raise_on_failed_checks, run_emit_cli
+        raise_on_failed_checks, run_emit_cli, seeded_payloads
 except ImportError:                     # direct script execution
     from timing import interleaved_medians, raise_on_failed_checks, \
-        run_emit_cli
+        run_emit_cli, seeded_payloads
 
 Row = Tuple[str, float, str]
 
@@ -112,8 +112,11 @@ def wall_section(net: str, width_mult: float, batches, *,
     params = cnn.init_fc_head(head, jax.random.PRNGKey(0))
     eng = Engine(backend="pallas", interpret=True)
     k0 = head[0][0]
-    xs = {b: jax.random.normal(jax.random.PRNGKey(b), (b, k0), jnp.float32)
-          for b in batches}
+    # the shared deterministic traffic source: one seeded request pool,
+    # batch b serves its first b requests (same bytes as the zoo/pipeline
+    # load generators draw)
+    pool = seeded_payloads(max(batches), (k0,), seed=0)
+    xs = {b: jnp.asarray(np.stack(pool[:b])) for b in batches}
 
     # consistency: batching amortizes traffic, never changes math — the
     # batched head forward must be bitwise equal to the per-sample

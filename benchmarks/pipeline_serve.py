@@ -40,10 +40,10 @@ import numpy as np
 
 try:                                    # package import (benchmarks.run)
     from benchmarks.timing import interleaved_medians, \
-        raise_on_failed_checks, run_emit_cli
+        raise_on_failed_checks, run_emit_cli, seeded_payloads
 except ImportError:                     # direct script execution
     from timing import interleaved_medians, raise_on_failed_checks, \
-        run_emit_cli
+        run_emit_cli, seeded_payloads
 
 Row = Tuple[str, float, str]
 
@@ -162,9 +162,7 @@ def wall_section(width_mult: float, in_res: int, n_req: int,
 
     params = cnn.init_cnn("alexnet", jax.random.PRNGKey(0), in_res=in_res,
                           width_mult=width_mult)
-    rng = np.random.default_rng(0)
-    images = [rng.standard_normal((in_res, in_res, 3)).astype(np.float32)
-              for _ in range(n_req)]
+    images = seeded_payloads(n_req, (in_res, in_res, 3))
     kw = dict(in_res=in_res, width_mult=width_mult, microbatch=microbatch)
 
     pipe = _serve_once("alexnet", params, images, pipelined=True, **kw)

@@ -11,7 +11,7 @@ import traceback
 
 def main() -> None:
     from benchmarks import conv_fused, fc_batch, kernel_bench, \
-        paper_figures, pipeline_serve, roofline_report
+        paper_figures, pipeline_serve, roofline_report, zoo_serve
 
     groups = []
     groups += paper_figures.ALL
@@ -26,6 +26,9 @@ def main() -> None:
     # dual-array pipelined serving: modeled makespan ratios + crossover
     # batches + pipelined-vs-sequential wall — writes BENCH_pipeline.json
     groups += [pipeline_serve.bench_rows]
+    # multi-tenant model-zoo serving: seeded Poisson trace under
+    # fifo/smf/edf with per-tenant SLO accounting — writes BENCH_zoo.json
+    groups += [zoo_serve.bench_rows]
 
     print("name,us_per_call,derived")
     failures = 0

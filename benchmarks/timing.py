@@ -9,15 +9,45 @@ quiet minute; the median over trials discards the outlier trials a mean
 would average in.
 
     from benchmarks.timing import interleaved_medians, median_wall_us
+
+It also hosts the **shared deterministic traffic source**: every serving
+benchmark (zoo_serve, pipeline_serve, fc_batch) draws its request
+payloads from :func:`seeded_payloads` and its arrival trace from
+:func:`poisson_arrivals`, so "the seeded trace" means the same bytes in
+every artifact and the policy-decision logs gated by check_bench.py are
+reproducible from the seed alone.
 """
 from __future__ import annotations
 
 import statistics
 import sys
 import time
-from typing import Any, Callable, Dict, List, Mapping
+from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
 
 import jax
+import numpy as np
+
+
+def seeded_payloads(n: int, shape: Sequence[int], *, seed: int = 0,
+                    dtype=np.float32) -> List[np.ndarray]:
+    """``n`` deterministic request payloads of ``shape`` (standard-normal,
+    one PCG64 stream per call) — the single image/activation source the
+    serving benchmarks share."""
+    rng = np.random.default_rng(seed)
+    return [rng.standard_normal(tuple(shape)).astype(dtype)
+            for _ in range(n)]
+
+
+def poisson_arrivals(n: int, rate_hz: float, *,
+                     seed: int = 0) -> Tuple[float, ...]:
+    """``n`` deterministic Poisson arrival times (cumulative exponential
+    inter-arrivals at ``rate_hz``, seeded PCG64) — the shared arrival
+    trace for open-loop load generation."""
+    if rate_hz <= 0:
+        raise ValueError(f"rate_hz must be > 0, got {rate_hz}")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_hz, size=n)
+    return tuple(float(t) for t in np.cumsum(gaps))
 
 
 class BenchConsistencyError(AssertionError):

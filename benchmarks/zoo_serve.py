@@ -1,0 +1,331 @@
+"""Multi-tenant model-zoo serving benchmark — the load generator that
+drives seeded Poisson traffic through the :class:`ModelZooServer` and
+records what each scheduling policy does with it.
+
+The zoo holds three compiled model variants at once (AlexNet fp32,
+VGG-16 fp32, AlexNet int8 — width-scaled for interpret-mode execution,
+full-geometry for the cost model) and serves one mixed trace of tagged
+tenant requests under each policy:
+
+* **fifo** — arrival order, the baseline;
+* **smf** — shortest predicted makespan first (the planner's modeled
+  wave cost as the job-size oracle);
+* **edf** — earliest deadline first, with deadline-miss accounting.
+
+Everything the scheduler decides runs in deterministic modeled time
+(:func:`~repro.core.perf_model.zoo_wave_cost` prices every wave), so the
+policy-decision log, per-tenant p50/p95/p99 latency, deadline-miss rate
+and array utilization in ``BENCH_zoo.json`` are pure functions of the
+seed — gated by ``benchmarks/check_bench.py`` like the other artifacts.
+Execution is real: every wave runs through the owning model's
+``CNNServer`` and each request's logits are checked **bitwise equal** to
+that model's single-model unbatched forward, under every policy.
+
+Acceptance invariants recorded as internal checks (process exits nonzero
+on failure): EDF strictly reduces the deadline-miss rate vs FIFO, and
+SMF strictly reduces mean latency vs FIFO, on the seeded trace.
+
+    PYTHONPATH=src python benchmarks/zoo_serve.py --fast --out BENCH_zoo.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks.timing import poisson_arrivals, \
+        raise_on_failed_checks, run_emit_cli, seeded_payloads
+except ImportError:                     # direct script execution
+    from timing import poisson_arrivals, raise_on_failed_checks, \
+        run_emit_cli, seeded_payloads
+
+Row = Tuple[str, float, str]
+
+#: Execution geometry: width-scaled models (interpret-mode Pallas on CPU),
+#: full-geometry cost model.  max_batch caps every model's wave size.
+WIDTH_MULT = 0.125
+IN_RES = {"alexnet": 67, "vgg16": 32}
+MAX_BATCH = 4
+
+#: The seeded trace per tier: per-tenant (model, n_requests, rate_hz,
+#: relative deadline seconds | None).  The "batch" tenant front-loads
+#: expensive VGG-16 waves; "rt" trickles in deadline-tight int8 AlexNet
+#: requests that FIFO strands behind the burst; "web" is fp32 AlexNet
+#: with a loose SLO.
+TRACE_TIERS = {
+    "fast": {
+        "seed": 0,
+        "tenants": [
+            ("batch", "vgg16", 6, 9000.0, None),
+            ("web", "alexnet", 6, 6000.0, 3.0e-3),
+            ("rt", "alexnet-int8", 6, 5000.0, 1.0e-3),
+        ],
+    },
+    "full": {
+        "seed": 0,
+        "tenants": [
+            ("batch", "vgg16", 10, 9000.0, None),
+            ("web", "alexnet", 10, 6000.0, 3.0e-3),
+            ("rt", "alexnet-int8", 10, 5000.0, 1.0e-3),
+        ],
+    },
+}
+
+#: Policies compared, in artifact order (fifo first — it is the baseline
+#: the two invariants reference).
+POLICY_NAMES = ("fifo", "smf", "edf")
+
+#: generate-mode knob (benchmarks/check_bench.py): the modeled schedule,
+#: decision log and latency accounting are execution-independent, so the
+#: regression gate regenerates with execution (and the parity checks)
+#: off.
+EXECUTE = True
+
+
+def make_trace(tier: str) -> List[dict]:
+    """The seeded mixed request stream: per-tenant Poisson arrivals +
+    seeded payloads, merged by arrival time, uids in arrival order.
+    Returns plain dicts so each policy run can materialize fresh
+    ZooRequest objects (the scheduler stamps completion in place)."""
+    cfg = TRACE_TIERS[tier]
+    raw = []
+    for ti, (tenant, model, n, rate, rel_dl) in enumerate(cfg["tenants"]):
+        net = "vgg16" if model == "vgg16" else "alexnet"
+        res = IN_RES[net]
+        arrivals = poisson_arrivals(n, rate, seed=cfg["seed"] + ti)
+        images = seeded_payloads(n, (res, res, 3),
+                                 seed=100 + cfg["seed"] + ti)
+        for a, img in zip(arrivals, images):
+            raw.append({"tenant": tenant, "model": model, "arrival_s": a,
+                        "deadline_s": None if rel_dl is None else a + rel_dl,
+                        "image": img})
+    raw.sort(key=lambda r: (r["arrival_s"], r["tenant"]))
+    for uid, r in enumerate(raw):
+        r["uid"] = uid
+    return raw
+
+
+def run_policy(policy_name: str, trace: List[dict], *,
+               execute: bool, refs: Dict[int, np.ndarray],
+               checks: List[dict]):
+    """One full drain of the seeded trace under ``policy_name``; returns
+    the ZooReport.  When executing, every request's logits are checked
+    bitwise against the cached single-model unbatched reference."""
+    from repro.serve.zoo import POLICIES, ModelZooServer, ZooRequest, \
+        build_zoo
+
+    models = build_zoo(("alexnet", "vgg16", "alexnet-int8"), seed=0,
+                       in_res=IN_RES, width_mult=WIDTH_MULT,
+                       max_batch=MAX_BATCH)
+    zoo = ModelZooServer(models, policy=POLICIES[policy_name]())
+    for r in trace:
+        zoo.submit(ZooRequest(uid=r["uid"], model=r["model"],
+                              image=r["image"], tenant=r["tenant"],
+                              arrival_s=r["arrival_s"],
+                              deadline_s=r["deadline_s"]))
+    if not execute:
+        # modeled schedule only: decisions/latencies are
+        # execution-independent by construction
+        requests = [r for q in zoo.tenants.values() for r in q]
+        for q in zoo.tenants.values():
+            q.clear()
+        decisions, _ = zoo._schedule(requests)
+        from repro.serve.zoo import ZooReport
+        by_tenant: Dict[str, list] = {}
+        for r in requests:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        return ZooReport(
+            policy=policy_name,
+            requests=tuple(sorted(requests, key=lambda r: r.uid)),
+            decisions=tuple(decisions),
+            makespan_s=max(r.finish_s for r in requests)
+            - min(r.arrival_s for r in requests),
+            conv_busy_s=sum(d.conv_s for d in decisions),
+            fc_busy_s=sum(d.fc_s for d in decisions),
+            per_tenant=tuple(zoo._tenant_stats(t, rs) for t, rs in
+                             sorted(by_tenant.items())))
+    report = zoo.serve()
+    bad = [r.uid for r in report.requests
+           if not np.array_equal(r.logits, refs[r.uid])]
+    checks.append({
+        "name": f"parity/{policy_name}"
+                "/logits_bitwise_equal_single_model_unbatched",
+        "passed": not bad,
+        "detail": f"{len(report.requests)} requests, mismatched uids: "
+                  f"{bad[:8]}"})
+    return report
+
+
+def unbatched_refs(trace: List[dict]) -> Dict[int, np.ndarray]:
+    """uid -> the single-model unbatched forward of each request through
+    its model's own params/engine — the parity reference every policy's
+    coalesced logits must match bitwise."""
+    import jax.numpy as jnp
+
+    from repro.models import cnn
+    from repro.serve.zoo import build_zoo
+
+    models = {m.name: m for m in build_zoo(
+        ("alexnet", "vgg16", "alexnet-int8"), seed=0, in_res=IN_RES,
+        width_mult=WIDTH_MULT, max_batch=MAX_BATCH)}
+    refs = {}
+    for r in trace:
+        m = models[r["model"]]
+        y = cnn.cnn_forward(m.spec.net, m.params,
+                            jnp.asarray(r["image"])[None],
+                            eng=m.server.engine)
+        refs[r["uid"]] = np.asarray(y)[0]
+    return refs
+
+
+def _report_doc(report) -> dict:
+    """The deterministic (modeled-time) slice of one policy's report."""
+    us = 1e6
+    return {
+        "decisions": [{
+            "index": d.index, "t_us": round(d.t_s * us, 3),
+            "model": d.model, "uids": list(d.uids), "batch": d.batch,
+            "conv_us": round(d.conv_s * us, 3),
+            "fc_us": round(d.fc_s * us, 3),
+            "queue_depths": {m: n for m, n in d.queue_depths},
+        } for d in report.decisions],
+        "per_tenant": {t.tenant: {
+            "n": t.n,
+            "mean_latency_us": round(t.mean_latency_s * us, 3),
+            "p50_us": round(t.p50_s * us, 3),
+            "p95_us": round(t.p95_s * us, 3),
+            "p99_us": round(t.p99_s * us, 3),
+            "deadlines": t.deadlines, "misses": t.misses,
+        } for t in report.per_tenant},
+        "mean_latency_us": round(report.mean_latency_s * us, 3),
+        "makespan_us": round(report.makespan_s * us, 3),
+        "deadline_misses": report.deadline_misses,
+        "deadline_count": report.deadline_count,
+        "miss_rate": round(report.miss_rate, 6),
+        "conv_utilization": round(report.conv_utilization, 6),
+        "fc_utilization": round(report.fc_utilization, 6),
+    }
+
+
+def emit(out_path: str = "BENCH_zoo.json", *, tier: str = "fast"
+         ) -> List[Row]:
+    """Run the benchmark, write the JSON artifact, return CSV rows for
+    benchmarks/run.py.  Raises
+    :class:`~benchmarks.timing.BenchConsistencyError` (after writing the
+    artifact) when any internal check fails."""
+    from repro.serve.zoo import build_zoo
+
+    checks: List[dict] = []
+    trace = make_trace(tier)
+    refs = unbatched_refs(trace) if EXECUTE else {}
+
+    # the zoo's compiled-model inventory + the modeled wave-cost table
+    # the scheduler prices with (deterministic, gated)
+    models = build_zoo(("alexnet", "vgg16", "alexnet-int8"), seed=0,
+                       in_res=IN_RES, width_mult=WIDTH_MULT,
+                       max_batch=MAX_BATCH)
+    zoo_doc = {"models": [{
+        "name": m.name, "net": m.spec.net,
+        "weight_dtype": m.spec.weight_dtype,
+        "microbatch": m.microbatch,
+        "preferred_microbatch": m.server.preferred_microbatch,
+        "wave_cost_us": {str(b): {
+            "conv": round(m.wave_cost(b).conv_s * 1e6, 3),
+            "fc": round(m.wave_cost(b).fc_s * 1e6, 3)}
+            for b in range(1, m.microbatch + 1)},
+    } for m in models]}
+
+    t0 = time.perf_counter()
+    policies = {}
+    for name in POLICY_NAMES:
+        rep = run_policy(name, trace, execute=EXECUTE, refs=refs,
+                         checks=checks)
+        policies[name] = _report_doc(rep)
+    wall_s = time.perf_counter() - t0
+
+    fifo, smf, edf = (policies[p] for p in POLICY_NAMES)
+    headline = {
+        "n_requests": len(trace),
+        "fifo_miss_rate": fifo["miss_rate"],
+        "edf_miss_rate": edf["miss_rate"],
+        "fifo_mean_latency_us": fifo["mean_latency_us"],
+        "smf_mean_latency_us": smf["mean_latency_us"],
+        "smf_latency_cut_vs_fifo": round(
+            1 - smf["mean_latency_us"] / fifo["mean_latency_us"], 4),
+    }
+    checks.append({
+        "name": "policy/edf_strictly_fewer_misses_than_fifo",
+        "passed": bool(edf["deadline_misses"] < fifo["deadline_misses"]),
+        "detail": f"edf {edf['deadline_misses']} vs fifo "
+                  f"{fifo['deadline_misses']} "
+                  f"(of {fifo['deadline_count']} deadlines)"})
+    checks.append({
+        "name": "policy/smf_strictly_lower_mean_latency_than_fifo",
+        "passed": bool(smf["mean_latency_us"] < fifo["mean_latency_us"]),
+        "detail": f"smf {smf['mean_latency_us']}us vs fifo "
+                  f"{fifo['mean_latency_us']}us"})
+
+    results = {"bench": "zoo_serve", "tier": tier,
+               "backend": "pallas-interpret-cpu",
+               "zoo": zoo_doc,
+               "trace": {
+                   "seed": TRACE_TIERS[tier]["seed"],
+                   "n_requests": len(trace),
+                   "tenants": [{"tenant": t, "model": m, "n": n,
+                                "rate_hz": r, "deadline_rel_us":
+                                    None if d is None
+                                    else round(d * 1e6, 3)}
+                               for t, m, n, r, d in
+                               TRACE_TIERS[tier]["tenants"]],
+               },
+               "policies": policies,
+               "headline": headline,
+               "wall": {"executed": EXECUTE,
+                        "total_serve_s": round(wall_s, 3)},
+               "checks": checks}
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2)
+
+    rows: List[Row] = []
+    for name in POLICY_NAMES:
+        p = policies[name]
+        rows.append((
+            f"zoo_serve/{name}", 0.0,
+            f"{len(p['decisions'])} waves, mean latency "
+            f"{p['mean_latency_us']:.0f}us, misses "
+            f"{p['deadline_misses']}/{p['deadline_count']}, util conv "
+            f"{p['conv_utilization']:.2f} fc {p['fc_utilization']:.2f}"))
+    rows.append(("zoo_serve/json", 0.0,
+                 f"wrote {out_path} ({len(checks)} checks, "
+                 f"{sum(not c['passed'] for c in checks)} failed)"))
+    raise_on_failed_checks(checks)
+    return rows
+
+
+def bench_rows() -> List[Row]:
+    """run.py group entry: fast tier, writes BENCH_zoo.json."""
+    return emit("BENCH_zoo.json", tier="fast")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_zoo.json")
+    tier = ap.add_mutually_exclusive_group()
+    tier.add_argument("--fast", dest="tier", action="store_const",
+                      const="fast", default="fast",
+                      help="CI smoke: 18-request mixed trace")
+    tier.add_argument("--full", dest="tier", action="store_const",
+                      const="full",
+                      help="nightly: 30-request mixed trace")
+    args = ap.parse_args()
+    run_emit_cli(emit, args.out, args.tier)
+
+
+if __name__ == "__main__":
+    main()

@@ -273,6 +273,59 @@ def pipeline_stage_seconds(net: str, batch: int = 1, *,
     return conv_s, fc_s
 
 
+@dataclass(frozen=True)
+class WaveCost:
+    """Modeled cost of ONE dual-array wave of ``batch`` samples of ``net``
+    on the TPU stage roofline — the per-model quantity the multi-tenant
+    zoo scheduler (:mod:`repro.serve.zoo`) prices dispatch decisions
+    with.  ``conv_s``/``fc_s`` are the two stage times the pipeline
+    overlaps: a wave occupies SA-CONV for ``conv_s`` and SA-FC for
+    ``fc_s``, so with both arrays free the wave completes in ``total_s``
+    while the steady-state dispatch period is ``bottleneck_s``."""
+    net: str
+    batch: int
+    weight_bytes: int
+    conv_s: float
+    fc_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.conv_s + self.fc_s
+
+    @property
+    def bottleneck_s(self) -> float:
+        return max(self.conv_s, self.fc_s)
+
+
+_WAVE_COST_CACHE: dict = {}
+
+
+def zoo_wave_cost(net: str, batch: int, *, bytes_w: Optional[int] = None,
+                  in_res: Optional[int] = None, in_ch: int = 3,
+                  chip: TPUChip = TPU_V5E,
+                  vmem_budget: Optional[int] = None) -> WaveCost:
+    """Price one serving wave of ``batch`` samples for the zoo scheduler:
+    :func:`pipeline_stage_seconds` split into the (conv, fc) stage terms,
+    memoized (the scheduler re-prices every candidate model at every
+    dispatch decision).  ``bytes_w=1`` models an int8-weight variant —
+    its FC weight stream is 4x cheaper than fp32, which is exactly why a
+    policy that *sees* wave costs can prefer it under load.  Full paper
+    geometry by default: the cost model prices the model variant, not the
+    width-scaled test/bench instantiation executing it."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    key = (net, batch, bytes_w, in_res, in_ch, chip, vmem_budget)
+    hit = _WAVE_COST_CACHE.get(key)
+    if hit is None:
+        conv_s, fc_s = pipeline_stage_seconds(
+            net, batch, in_res=in_res, in_ch=in_ch, bytes_w=bytes_w,
+            chip=chip, vmem_budget=vmem_budget)
+        hit = _WAVE_COST_CACHE[key] = WaveCost(
+            net, batch, bytes_w if bytes_w is not None else 4,
+            conv_s, fc_s)
+    return hit
+
+
 def tpu_pipeline_crossover_batch(net: str, *,
                                  in_res: Optional[int] = None,
                                  in_ch: int = 3, bytes_in: int = 4,

@@ -72,6 +72,23 @@ def quantize_params(params: Any) -> Any:
         one, params, is_leaf=lambda x: isinstance(x, QTensor))
 
 
+def quantize_cnn_params(params: Any) -> Any:
+    """Quantize a CNN parameter list (:func:`repro.models.cnn.init_cnn`
+    layout): every conv filter ``f`` and FC weight ``w`` becomes an int8
+    :class:`QTensor`; biases and pool placeholders stay as-is.  The
+    result serves through the same kernels un-dequantized — this is how a
+    zoo registers an int8 model variant."""
+    out = []
+    for p in params:
+        if "f" in p:
+            out.append({**p, "f": quantize(p["f"])})
+        elif "w" in p:
+            out.append({**p, "w": quantize(p["w"])})
+        else:
+            out.append(p)
+    return out
+
+
 def quantized_bytes(params: Any) -> int:
     total = 0
     for leaf in jax.tree.leaves(params):

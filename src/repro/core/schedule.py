@@ -272,6 +272,58 @@ class LayerSchedule(Mapping):
                 cls.compile_cnn(net, stage="fc", **kw))
 
 
+class ScheduleRegistry:
+    """Multi-model schedule registry — the compiled artifacts of a model
+    zoo, keyed by ``(net, dtype_tag, batch)``.
+
+    One serving process holding several compiled models (the
+    :class:`repro.serve.zoo.ModelZooServer`) needs its schedules to be an
+    *inspectable set*, not anonymous memo entries: which model variants
+    are compiled, at which micro-batch, with which per-stage plans.  Each
+    :meth:`register` call compiles (via the memoized
+    :meth:`LayerSchedule.compile_cnn_stages`) and files the
+    (conv-stage, fc-stage) schedule pair under its key; ``dtype_tag``
+    names the weight format of the variant (``"float32"`` / ``"int8"``),
+    so the fp32 and int8 AlexNet variants coexist as distinct entries."""
+
+    def __init__(self) -> None:
+        self._stages: Dict[Tuple[str, str, int],
+                           Tuple[LayerSchedule, LayerSchedule]] = {}
+
+    def register(self, net: str, *, dtype_tag: str = "float32",
+                 batch: int = 1, **compile_kw: Any
+                 ) -> Tuple[LayerSchedule, LayerSchedule]:
+        """Compile and file the stage-schedule pair for one
+        ``(net, dtype_tag, batch)`` variant; idempotent (re-registering a
+        key returns the filed pair)."""
+        key = (net, dtype_tag, batch)
+        hit = self._stages.get(key)
+        if hit is None:
+            hit = self._stages[key] = LayerSchedule.compile_cnn_stages(
+                net, batch=batch, **compile_kw)
+        return hit
+
+    def stages(self, net: str, dtype_tag: str, batch: int
+               ) -> Tuple[LayerSchedule, LayerSchedule]:
+        key = (net, dtype_tag, batch)
+        if key not in self._stages:
+            raise KeyError(f"no compiled schedule for {key}; "
+                           f"registered: {sorted(self._stages)}")
+        return self._stages[key]
+
+    def keys(self) -> Tuple[Tuple[str, str, int], ...]:
+        return tuple(sorted(self._stages))
+
+    def __contains__(self, key: Tuple[str, str, int]) -> bool:
+        return key in self._stages
+
+    def __len__(self) -> int:
+        return len(self._stages)
+
+    def __repr__(self) -> str:
+        return f"ScheduleRegistry({list(self.keys())!r})"
+
+
 _CACHE: Dict[Tuple, LayerSchedule] = {}
 
 

@@ -120,28 +120,53 @@ class CNNServer:
         self.pipeline = pipeline
         self.engine = engine if engine is not None \
             else Engine(backend="pallas", interpret=True)
-        self.microbatch = self._preferred_microbatch()
+        self._planner_microbatch = self._preferred_microbatch()
+        self.microbatch = self._planner_microbatch
         self.queue: List[CNNRequest] = []
         self.waves: List[WaveReport] = []
         self._wave_counter = 0
+        self._uids: set = set()
+        self._inflight: Optional[_StageBuffer] = None
+
+    @property
+    def preferred_microbatch(self) -> int:
+        """The planner's resident batch tile for this model's dominant FC
+        layer under the engine's policy — the wave size one streamed
+        weight pass amortizes over.  Public so a multi-model scheduler
+        (:mod:`repro.serve.zoo`) can size waves without reaching into the
+        planner; ``self.microbatch`` (initialized to this) is the mutable
+        admission cap actually used."""
+        return self._planner_microbatch
 
     # -- planning -----------------------------------------------------------
-    def _fc_shapes(self) -> List[Tuple[int, int]]:
-        """(k, n) of every FC layer, read off the actual parameters (the
-        width-scaled geometry, not the paper table)."""
+    def _fc_shapes(self) -> List[Tuple[int, int, int]]:
+        """(k, n, weight_bytes) of every FC layer, read off the actual
+        parameters (the width-scaled geometry, not the paper table).
+        int8 :class:`~repro.core.quant.QTensor` weights report their real
+        1-byte stream cost — the planner sizes the micro-batch for the
+        bytes that actually cross HBM."""
+        from repro.core.quant import QTensor
         from repro.models import cnn
         spec, _ = cnn.NETWORKS[self.net]
-        return [tuple(p["w"].shape)
-                for s, p in zip(spec, self.params) if s.kind == "fc"]
+        out = []
+        for s, p in zip(spec, self.params):
+            if s.kind != "fc":
+                continue
+            w = p["w"]
+            if isinstance(w, QTensor):
+                out.append((*w.q.shape, 1))
+            else:
+                out.append((*w.shape, jnp.dtype(w.dtype).itemsize))
+        return out
 
     def _preferred_microbatch(self) -> int:
         """Plan the dominant (largest ``k*n``) FC layer at the admission
         cap and admit the batch tile the plan keeps resident per weight
         pass — the samples one streamed weight byte serves."""
-        k, n = max(self._fc_shapes(), key=lambda s: s[0] * s[1])
+        k, n, wb = max(self._fc_shapes(), key=lambda s: s[0] * s[1])
         ab = self.dtype.itemsize
         plan = self.engine.policy.plan_fc(self.max_batch, n, k,
-                                          act_bytes=ab, weight_bytes=ab,
+                                          act_bytes=ab, weight_bytes=wb,
                                           regime="sa_fc")
         return max(1, min(self.max_batch, plan.bb))
 
@@ -154,10 +179,18 @@ class CNNServer:
 
     # -- serving ------------------------------------------------------------
     def submit(self, req: CNNRequest) -> None:
+        """Admit one request.  Duplicate uids are REJECTED (``ValueError``):
+        a uid names one request for the lifetime of the server — waves,
+        traces and zoo accounting all key on it, so re-submitting a uid
+        would silently alias two requests in every report."""
         shape = (self.in_res, self.in_res, self.in_ch)
         if tuple(req.image.shape) != shape:
             raise ValueError(f"request {req.uid}: image shape "
                              f"{tuple(req.image.shape)} != server {shape}")
+        if req.uid in self._uids:
+            raise ValueError(f"duplicate request uid {req.uid}: uids are "
+                             "unique per server lifetime")
+        self._uids.add(req.uid)
         self.queue.append(req)
 
     def _conv_stage_dispatch(self, wave_idx: int,
@@ -198,9 +231,43 @@ class CNNServer:
             conv_trace=buf.conv_trace, fc_trace=tr))
         return buf.requests
 
+    def step_wave(self) -> List[CNNRequest]:
+        """Dispatch and complete ONE wave (up to ``microbatch`` requests,
+        both stages, blocking); returns its completed requests, ``[]`` on
+        an empty queue.  Any in-flight pipelined wave is completed first
+        so wave order is preserved.  This is the wave-executor entry the
+        multi-tenant zoo scheduler drives: the *zoo* decides which
+        model's wave dispatches next, the model's server executes it."""
+        finished: List[CNNRequest] = []
+        if self._inflight is not None:
+            finished.extend(self._fc_stage_complete(self._inflight))
+            self._inflight = None
+        if not self.queue:
+            return finished
+        wave = self.queue[:self.microbatch]
+        self.queue = self.queue[len(wave):]
+        buf = self._conv_stage_dispatch(self._wave_counter, wave)
+        self._wave_counter += 1
+        finished.extend(self._fc_stage_complete(buf))
+        return finished
+
+    def drain(self) -> List[CNNRequest]:
+        """Flush the server: complete the in-flight pipelined wave (if
+        any), then serve everything still queued — including the final
+        partial wave smaller than the planner's micro-batch.  Explicit
+        and public so a zoo scheduler can flush a tenant's tail without
+        poking at private stage buffers; ``run()`` ends with it."""
+        finished: List[CNNRequest] = []
+        if self._inflight is not None:
+            finished.extend(self._fc_stage_complete(self._inflight))
+            self._inflight = None
+        while self.queue:
+            finished.extend(self.step_wave())
+        return finished
+
     def run(self, *, pipelined: Optional[bool] = None) -> List[CNNRequest]:
         """Drain the queue in planner-preferred micro-batches; returns the
-        completed requests.
+        completed requests (``[]`` for an empty queue).
 
         Pipelined (default, per ``self.pipeline``): wave *i+1*'s conv
         stage is dispatched BEFORE wave *i*'s FC stage is drained, so the
@@ -210,18 +277,16 @@ class CNNServer:
         per-request logits are bitwise identical in both modes."""
         pipelined = self.pipeline if pipelined is None else pipelined
         finished: List[CNNRequest] = []
-        inflight: Optional[_StageBuffer] = None
         while self.queue:
             wave = self.queue[:self.microbatch]
             self.queue = self.queue[len(wave):]
             buf = self._conv_stage_dispatch(self._wave_counter, wave)
             self._wave_counter += 1
-            if inflight is not None:
-                finished.extend(self._fc_stage_complete(inflight))
-            inflight = buf
+            if self._inflight is not None:
+                finished.extend(self._fc_stage_complete(self._inflight))
+            self._inflight = buf
             if not pipelined:
-                finished.extend(self._fc_stage_complete(inflight))
-                inflight = None
-        if inflight is not None:
-            finished.extend(self._fc_stage_complete(inflight))
+                finished.extend(self._fc_stage_complete(self._inflight))
+                self._inflight = None
+        finished.extend(self.drain())
         return finished

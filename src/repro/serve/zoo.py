@@ -1,0 +1,473 @@
+"""Multi-tenant model-zoo serving — one engine, many compiled models,
+SLO-aware dual-array wave scheduling.
+
+The paper's core claim is that *jointly* scheduling heterogeneous work
+(CONV on SA-CONV, FC on SA-FC) beats optimizing either array in
+isolation.  This module is the serving-side analogue: one engine holds
+several **compiled model variants** at once (AlexNet fp32, VGG-16 fp32,
+an int8 AlexNet, ...), admits a mixed stream of tagged requests into
+per-tenant queues, and decides *which model's wave dispatches next* using
+the planner data PRs 1-5 built:
+
+* each model's wave size is its planner-preferred micro-batch — the
+  resident batch tile (:attr:`~repro.core.dataflow.FCPlan.bb`) one
+  streamed FC weight pass amortizes over
+  (:attr:`~repro.serve.cnn_server.CNNServer.preferred_microbatch`);
+* each candidate wave is priced by the modeled dual-array stage costs
+  (:func:`~repro.core.perf_model.zoo_wave_cost` — the TPU stage-roofline
+  twin of :func:`~repro.core.perf_model.pipeline_makespan`), so the
+  scheduler *knows* a VGG-16 wave occupies SA-CONV ~40x longer than an
+  AlexNet wave and that the int8 variant's FC stream is 4x cheaper;
+* a pluggable :class:`SchedulingPolicy` picks the next wave while the
+  other array drains the previous one: :class:`FIFOPolicy` (arrival
+  order), :class:`ShortestMakespanPolicy` (cheapest predicted wave
+  first) and :class:`EDFPolicy` (earliest deadline first, with
+  deadline-miss accounting).
+
+Scheduling runs in deterministic **modeled time** (the virtual clock
+advances by the wave costs above, with wave *i*'s SA-FC stage
+overlapping wave *i+1*'s SA-CONV stage exactly like the pipelined
+:class:`~repro.serve.cnn_server.CNNServer`), so every policy decision,
+latency percentile and deadline miss is a pure function of the trace —
+pinnable in tests and gated by ``benchmarks/check_bench.py``.  Execution
+is real: every scheduled wave runs through its model's ``CNNServer``
+(the per-model wave executor) on the actual kernels, and each request's
+logits are **bitwise equal** to that model's single-model unbatched
+forward no matter which policy or coalescing admitted it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.registry import ZooModelSpec, get_zoo_model
+from repro.core.engine import Engine
+from repro.core.perf_model import WaveCost, zoo_wave_cost
+from repro.core.schedule import ScheduleRegistry
+from repro.serve.cnn_server import CNNRequest, CNNServer
+
+
+@dataclasses.dataclass
+class ZooRequest:
+    """One tagged request of the mixed stream: which model, which tenant,
+    when it arrived (virtual seconds), and optionally by when it must
+    finish (``deadline_s``, absolute virtual time — the SLO)."""
+    uid: int
+    model: str
+    image: np.ndarray                     # (H, W, C) of the model's server
+    tenant: str = "default"
+    arrival_s: float = 0.0
+    deadline_s: Optional[float] = None
+    # -- filled by the scheduler/executor ----------------------------------
+    dispatch_s: Optional[float] = None    # SA-CONV start of its wave
+    finish_s: Optional[float] = None      # SA-FC completion of its wave
+    logits: Optional[np.ndarray] = None
+    done: bool = False
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        return None if self.finish_s is None \
+            else self.finish_s - self.arrival_s
+
+    @property
+    def missed_deadline(self) -> Optional[bool]:
+        """None = no SLO attached; else whether the modeled completion
+        blew the absolute deadline."""
+        if self.deadline_s is None:
+            return None
+        return None if self.finish_s is None \
+            else self.finish_s > self.deadline_s
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveDecision:
+    """One scheduler decision: at modeled time ``t_s`` the policy picked
+    ``model``'s wave of ``batch`` requests, priced at the modeled stage
+    costs below.  The ordered decision list is the deterministic policy
+    log the regression gate pins."""
+    index: int
+    t_s: float
+    model: str
+    uids: Tuple[int, ...]
+    batch: int
+    conv_s: float
+    fc_s: float
+    queue_depths: Tuple[Tuple[str, int], ...]   # pending per model at pick
+
+    @property
+    def total_s(self) -> float:
+        return self.conv_s + self.fc_s
+
+
+class SchedulingPolicy:
+    """Picks which model's wave dispatches next.  ``pick`` sees the
+    non-empty pending queues (each in arrival order), the modeled clock,
+    and a pricing callback ``cost(model, batch) -> WaveCost``; it returns
+    a model name.  ``wave_order`` orders one model's queue before the
+    wave is cut from its head (FIFO by arrival unless overridden)."""
+
+    name = "base"
+
+    def pick(self, now: float, pending: Mapping[str, List[ZooRequest]],
+             cost: Callable[[str, int], WaveCost]) -> str:
+        raise NotImplementedError
+
+    def wave_order(self, reqs: List[ZooRequest]) -> List[ZooRequest]:
+        return reqs
+
+    @staticmethod
+    def _head_key(q: List[ZooRequest]) -> Tuple[float, int]:
+        return (q[0].arrival_s, q[0].uid)
+
+
+class FIFOPolicy(SchedulingPolicy):
+    """Oldest head-of-queue request first — the baseline every SLO/latency
+    comparison in BENCH_zoo.json is against."""
+
+    name = "fifo"
+
+    def pick(self, now, pending, cost):
+        return min(pending, key=lambda m: (*self._head_key(pending[m]), m))
+
+
+class ShortestMakespanPolicy(SchedulingPolicy):
+    """Cheapest predicted wave first: price the wave each candidate model
+    would dispatch (its queue head cut at the model's micro-batch) with
+    the modeled dual-array stage costs and run the smallest total.  The
+    classic SJF mean-latency argument, with the planner's own cost model
+    as the job-size oracle."""
+
+    name = "smf"
+
+    def pick(self, now, pending, cost):
+        return min(pending,
+                   key=lambda m: (cost(m, len(pending[m])).total_s,
+                                  *self._head_key(pending[m]), m))
+
+
+class EDFPolicy(SchedulingPolicy):
+    """Earliest deadline first: the model owning the most urgent pending
+    request dispatches next, and inside that model's queue the
+    tightest-deadline requests board the wave first.  Requests without a
+    deadline sort last (best effort)."""
+
+    name = "edf"
+
+    @staticmethod
+    def _urgency(r: ZooRequest) -> Tuple[float, float, int]:
+        d = r.deadline_s if r.deadline_s is not None else float("inf")
+        return (d, r.arrival_s, r.uid)
+
+    def pick(self, now, pending, cost):
+        return min(pending,
+                   key=lambda m: (min(self._urgency(r) for r in pending[m]),
+                                  m))
+
+    def wave_order(self, reqs):
+        return sorted(reqs, key=self._urgency)
+
+
+POLICIES: Dict[str, Callable[[], SchedulingPolicy]] = {
+    "fifo": FIFOPolicy, "smf": ShortestMakespanPolicy, "edf": EDFPolicy,
+}
+
+
+class ZooModel:
+    """One compiled model variant held by the zoo: the registry spec, its
+    (possibly width-scaled) parameters, the per-model
+    :class:`~repro.serve.cnn_server.CNNServer` wave executor, and the
+    modeled wave-cost pricing the scheduler consults.  The cost model
+    always prices the *full-geometry* variant (``spec.weight_bytes``
+    narrows the int8 FC stream) — the scheduler reasons about the model,
+    not about the shrunken test instantiation executing it."""
+
+    def __init__(self, spec: ZooModelSpec, params: list, *,
+                 in_res: Optional[int] = None, width_mult: float = 1.0,
+                 max_batch: int = 8,
+                 engine: Optional[Engine] = None) -> None:
+        self.spec = spec
+        self.name = spec.name
+        self.params = params
+        self.server = CNNServer(spec.net, params, in_res=in_res,
+                                width_mult=width_mult, max_batch=max_batch,
+                                engine=engine)
+
+    @property
+    def microbatch(self) -> int:
+        """The wave size the scheduler cuts for this model — its server's
+        planner-preferred micro-batch (public, satellite of PR 4's bb)."""
+        return self.server.microbatch
+
+    def wave_cost(self, batch: int) -> WaveCost:
+        """Modeled dual-array stage cost of one ``batch``-sample wave of
+        this variant (memoized in perf_model)."""
+        return zoo_wave_cost(self.spec.net, batch,
+                             bytes_w=self.spec.weight_bytes)
+
+
+def build_zoo(names: Sequence[str], *, seed: int = 0,
+              in_res: Optional[Mapping[str, int]] = None,
+              width_mult: float = 1.0, max_batch: int = 8,
+              engine: Optional[Engine] = None) -> List[ZooModel]:
+    """Instantiate zoo models from the registry by name (seeded params;
+    int8 variants quantized per-channel via
+    :func:`~repro.core.quant.quantize_cnn_params`).  ``in_res`` maps net
+    name -> serving resolution (default: the spec's native resolution);
+    ``width_mult`` scales every model identically so tests/benches can
+    shrink execution without touching the cost model."""
+    import jax
+
+    from repro.core.quant import quantize_cnn_params
+    from repro.models import cnn
+
+    out = []
+    for i, name in enumerate(names):
+        spec = get_zoo_model(name)
+        res = (in_res or {}).get(spec.net, spec.in_res)
+        params = cnn.init_cnn(spec.net, jax.random.PRNGKey(seed + i),
+                              in_res=res, width_mult=width_mult)
+        if spec.weight_dtype == "int8":
+            params = quantize_cnn_params(params)
+        out.append(ZooModel(spec, params, in_res=res,
+                            width_mult=width_mult, max_batch=max_batch,
+                            engine=engine))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantStats:
+    tenant: str
+    n: int
+    mean_latency_s: float
+    p50_s: float
+    p95_s: float
+    p99_s: float
+    deadlines: int
+    misses: int
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.deadlines if self.deadlines else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ZooReport:
+    """Everything one :meth:`ModelZooServer.serve` drain produced: the
+    completed requests, the ordered policy-decision log, and the modeled
+    accounting (per-tenant latency percentiles, deadline misses,
+    per-array utilization)."""
+    policy: str
+    requests: Tuple[ZooRequest, ...]
+    decisions: Tuple[WaveDecision, ...]
+    makespan_s: float
+    conv_busy_s: float
+    fc_busy_s: float
+    per_tenant: Tuple[TenantStats, ...]
+
+    @property
+    def mean_latency_s(self) -> float:
+        lats = [r.latency_s for r in self.requests]
+        return float(np.mean(lats)) if lats else 0.0
+
+    @property
+    def deadline_misses(self) -> int:
+        return sum(bool(r.missed_deadline) for r in self.requests)
+
+    @property
+    def deadline_count(self) -> int:
+        return sum(r.deadline_s is not None for r in self.requests)
+
+    @property
+    def miss_rate(self) -> float:
+        n = self.deadline_count
+        return self.deadline_misses / n if n else 0.0
+
+    @property
+    def conv_utilization(self) -> float:
+        return self.conv_busy_s / self.makespan_s if self.makespan_s else 0.0
+
+    @property
+    def fc_utilization(self) -> float:
+        return self.fc_busy_s / self.makespan_s if self.makespan_s else 0.0
+
+    def summary(self) -> str:
+        lines = [f"[zoo:{self.policy}] {len(self.requests)} requests in "
+                 f"{len(self.decisions)} waves, makespan "
+                 f"{self.makespan_s * 1e3:.3f} ms, mean latency "
+                 f"{self.mean_latency_s * 1e3:.3f} ms, misses "
+                 f"{self.deadline_misses}/{self.deadline_count}, "
+                 f"util conv {self.conv_utilization:.2f} / "
+                 f"fc {self.fc_utilization:.2f}"]
+        for t in self.per_tenant:
+            lines.append(f"  tenant {t.tenant}: n={t.n} p50 "
+                         f"{t.p50_s * 1e3:.3f} ms p95 {t.p95_s * 1e3:.3f} "
+                         f"ms p99 {t.p99_s * 1e3:.3f} ms "
+                         f"misses {t.misses}/{t.deadlines}")
+        return "\n".join(lines)
+
+
+class ModelZooServer:
+    """Hold several compiled models, admit a mixed tagged request stream
+    into per-tenant queues, and schedule dual-array waves with a
+    pluggable policy priced by the planner's own cost model.
+
+    ``serve()`` drains everything submitted so far: it first runs the
+    deterministic modeled-time schedule (policy decisions, per-request
+    dispatch/finish times, utilization), then executes every scheduled
+    wave — in decision order — through the owning model's ``CNNServer``
+    so each request carries real logits, bitwise equal to its model's
+    unbatched forward."""
+
+    def __init__(self, models: Sequence[ZooModel], *,
+                 policy: Optional[SchedulingPolicy] = None,
+                 registry: Optional[ScheduleRegistry] = None) -> None:
+        if not models:
+            raise ValueError("a zoo needs at least one model")
+        self.models: Dict[str, ZooModel] = {}
+        for m in models:
+            if m.name in self.models:
+                raise ValueError(f"duplicate zoo model {m.name!r}")
+            self.models[m.name] = m
+        self.policy = policy if policy is not None else FIFOPolicy()
+        # the compiled-schedule registry: one (net, dtype, batch) entry
+        # per model variant at its steady-state wave size
+        self.registry = registry if registry is not None \
+            else ScheduleRegistry()
+        for m in self.models.values():
+            srv = m.server
+            self.registry.register(
+                m.spec.net, dtype_tag=m.spec.weight_dtype,
+                batch=srv.microbatch, in_res=srv.in_res, in_ch=srv.in_ch,
+                width_mult=srv.width_mult, dtype=srv.dtype,
+                policy=srv.engine.policy, params=srv.params)
+        self.tenants: Dict[str, List[ZooRequest]] = {}
+        self._uids: set = set()
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, req: ZooRequest) -> None:
+        """Admit one tagged request into its tenant's queue.  Unknown
+        model names raise (the registry's lookup contract); duplicate
+        uids raise like the per-model server does."""
+        if req.model not in self.models:
+            raise KeyError(f"unknown zoo model {req.model!r}; "
+                           f"serving: {tuple(self.models)}")
+        if req.uid in self._uids:
+            raise ValueError(f"duplicate request uid {req.uid}: uids are "
+                             "unique per zoo lifetime")
+        self._uids.add(req.uid)
+        self.tenants.setdefault(req.tenant, []).append(req)
+
+    def pending_count(self) -> int:
+        return sum(len(q) for q in self.tenants.values())
+
+    # -- scheduling (deterministic modeled time) ----------------------------
+    def _cost(self, model: str, queued: int) -> WaveCost:
+        m = self.models[model]
+        return m.wave_cost(min(queued, m.microbatch))
+
+    def _schedule(self, requests: List[ZooRequest]
+                  ) -> Tuple[List[WaveDecision],
+                             List[Tuple[str, List[ZooRequest]]]]:
+        """The modeled-time simulation: admit by arrival, pick waves with
+        the policy whenever SA-CONV frees, overlap each wave's SA-FC
+        stage with the next wave's SA-CONV stage (the dual-array
+        pipeline), and stamp every request's dispatch/finish."""
+        undisp = sorted(requests, key=lambda r: (r.arrival_s, r.uid))
+        pending: Dict[str, List[ZooRequest]] = {m: [] for m in self.models}
+        decisions: List[WaveDecision] = []
+        waves: List[Tuple[str, List[ZooRequest]]] = []
+        conv_free = fc_free = 0.0
+        i, n = 0, len(undisp)
+        done = 0
+        while done < n:
+            now = conv_free
+            if i < n and not any(pending.values()):
+                now = max(now, undisp[i].arrival_s)     # idle until arrival
+            while i < n and undisp[i].arrival_s <= now:
+                pending[undisp[i].model].append(undisp[i])
+                i += 1
+            candidates = {m: q for m, q in pending.items() if q}
+            chosen = self.policy.pick(now, candidates, self._cost)
+            zm = self.models[chosen]
+            queue = self.policy.wave_order(pending[chosen])
+            wave, rest = queue[:zm.microbatch], queue[zm.microbatch:]
+            pending[chosen] = rest
+            cost = zm.wave_cost(len(wave))
+            conv_done = now + cost.conv_s
+            fc_start = max(conv_done, fc_free)
+            fc_done = fc_start + cost.fc_s
+            # one-deep stage buffer, like the pipelined CNNServer: the
+            # next wave's conv stage may start only once this wave's
+            # features have been handed to the SA-FC array
+            conv_free, fc_free = max(conv_done, fc_start), fc_done
+            for r in wave:
+                r.dispatch_s, r.finish_s = now, fc_done
+            decisions.append(WaveDecision(
+                index=len(decisions), t_s=now, model=chosen,
+                uids=tuple(r.uid for r in wave), batch=len(wave),
+                conv_s=cost.conv_s, fc_s=cost.fc_s,
+                queue_depths=tuple(sorted((m, len(q))
+                                          for m, q in candidates.items()))))
+            waves.append((chosen, wave))
+            done += len(wave)
+        return decisions, waves
+
+    # -- execution (real kernels, bitwise per-request logits) ---------------
+    def _execute(self, waves: List[Tuple[str, List[ZooRequest]]]) -> None:
+        by_uid: Dict[int, ZooRequest] = {}
+        for model, wave in waves:
+            srv = self.models[model].server
+            for r in wave:
+                by_uid[r.uid] = r
+                srv.submit(CNNRequest(uid=r.uid, image=r.image))
+            for c in srv.step_wave():
+                req = by_uid[c.uid]
+                req.logits, req.done = c.logits, True
+        # flush: the schedule dispatches every request, so the per-model
+        # servers must be empty — drain() proves it (and completes any
+        # stragglers defensively)
+        for m in self.models.values():
+            for c in m.server.drain():
+                req = by_uid[c.uid]
+                req.logits, req.done = c.logits, True
+
+    # -- accounting ---------------------------------------------------------
+    @staticmethod
+    def _tenant_stats(tenant: str, reqs: List[ZooRequest]) -> TenantStats:
+        lats = np.array([r.latency_s for r in reqs], dtype=np.float64)
+        return TenantStats(
+            tenant=tenant, n=len(reqs),
+            mean_latency_s=float(lats.mean()),
+            p50_s=float(np.percentile(lats, 50)),
+            p95_s=float(np.percentile(lats, 95)),
+            p99_s=float(np.percentile(lats, 99)),
+            deadlines=sum(r.deadline_s is not None for r in reqs),
+            misses=sum(bool(r.missed_deadline) for r in reqs))
+
+    def serve(self) -> ZooReport:
+        """Drain every per-tenant queue: schedule (modeled time), execute
+        (real kernels), account.  Returns the :class:`ZooReport`; the
+        admitted requests are completed in place."""
+        requests = [r for q in self.tenants.values() for r in q]
+        for q in self.tenants.values():
+            q.clear()
+        if not requests:
+            return ZooReport(self.policy.name, (), (), 0.0, 0.0, 0.0, ())
+        decisions, waves = self._schedule(requests)
+        self._execute(waves)
+        makespan = max(r.finish_s for r in requests) \
+            - min(r.arrival_s for r in requests)
+        by_tenant: Dict[str, List[ZooRequest]] = {}
+        for r in requests:
+            by_tenant.setdefault(r.tenant, []).append(r)
+        return ZooReport(
+            policy=self.policy.name,
+            requests=tuple(sorted(requests, key=lambda r: r.uid)),
+            decisions=tuple(decisions),
+            makespan_s=makespan,
+            conv_busy_s=sum(d.conv_s for d in decisions),
+            fc_busy_s=sum(d.fc_s for d in decisions),
+            per_tenant=tuple(self._tenant_stats(t, rs) for t, rs in
+                             sorted(by_tenant.items())))

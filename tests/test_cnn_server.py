@@ -116,3 +116,74 @@ def test_server_rejects_wrong_shape(alexnet_params):
     srv = CNNServer("alexnet", alexnet_params, in_res=RES, width_mult=WIDTH)
     with pytest.raises(ValueError, match="image shape"):
         srv.submit(CNNRequest(uid=0, image=np.zeros((5, 5, 3), np.float32)))
+
+
+def test_server_run_on_empty_queue_is_a_noop(alexnet_params):
+    """Edge case: draining a server nobody submitted to returns [] (both
+    entries, both modes) and files no waves."""
+    srv = CNNServer("alexnet", alexnet_params, in_res=RES, width_mult=WIDTH)
+    assert srv.run() == []
+    assert srv.run(pipelined=False) == []
+    assert srv.step_wave() == []
+    assert srv.drain() == []
+    assert srv.waves == []
+
+
+def test_server_final_wave_smaller_than_planner_microbatch(alexnet_params):
+    """Edge case: a queue that is not a multiple of FCPlan.bb ends with a
+    partial wave — it still dispatches (smaller batch variant) and its
+    logits match the unbatched forward bitwise."""
+    srv = CNNServer("alexnet", alexnet_params, in_res=RES, width_mult=WIDTH,
+                    max_batch=8)
+    assert srv.preferred_microbatch == 8
+    reqs = _requests(3, seed=3)             # 3 < bb: one partial wave
+    for r in reqs:
+        srv.submit(r)
+    done = srv.run()
+    assert len(done) == 3
+    assert [w.batch for w in srv.waves] == [3]
+    eng = Engine(backend="pallas", interpret=True)
+    single = cnn.cnn_forward("alexnet", alexnet_params,
+                             jnp.asarray(reqs[0].image)[None], eng=eng)
+    np.testing.assert_array_equal(np.asarray(single)[0], reqs[0].logits)
+
+
+def test_server_rejects_duplicate_uids(alexnet_params):
+    """Edge case: uids name one request for the server's lifetime —
+    resubmitting one raises, even after the original already completed."""
+    srv = CNNServer("alexnet", alexnet_params, in_res=RES, width_mult=WIDTH)
+    srv.submit(_requests(1)[0])
+    with pytest.raises(ValueError, match="duplicate request uid 0"):
+        srv.submit(_requests(1)[0])
+    srv.run()
+    with pytest.raises(ValueError, match="duplicate request uid 0"):
+        srv.submit(_requests(1)[0])
+
+
+def test_server_step_wave_and_drain(alexnet_params):
+    """The zoo-facing wave-executor API: step_wave() serves exactly one
+    micro-batch per call; drain() flushes the tail (including a final
+    partial wave)."""
+    srv = CNNServer("alexnet", alexnet_params, in_res=RES, width_mult=WIDTH,
+                    max_batch=4)
+    srv.microbatch = 2
+    reqs = _requests(5, seed=4)
+    for r in reqs:
+        srv.submit(r)
+    first = srv.step_wave()
+    assert [r.uid for r in first] == [0, 1]
+    assert len(srv.queue) == 3
+    rest = srv.drain()
+    assert [r.uid for r in rest] == [2, 3, 4]
+    assert [w.batch for w in srv.waves] == [2, 2, 1]
+    assert all(r.done for r in reqs)
+
+
+def test_server_preferred_microbatch_is_planner_pinned(alexnet_params):
+    """preferred_microbatch is the immutable planner answer; microbatch
+    is the mutable admission cap initialized from it."""
+    srv = CNNServer("alexnet", alexnet_params, in_res=RES, width_mult=WIDTH,
+                    max_batch=8)
+    assert srv.microbatch == srv.preferred_microbatch == 8
+    srv.microbatch = 2
+    assert srv.preferred_microbatch == 8    # the planner's answer persists
