@@ -24,7 +24,7 @@ import json
 import os
 import sys
 import tempfile
-from typing import Callable, Dict, List
+from collections.abc import Callable
 
 #: Relative tolerance for float fields: the planner math is deterministic,
 #: but JSON round-trips and libm differences across platforms can wiggle
@@ -93,7 +93,7 @@ def _zoo_fields(doc: dict) -> dict:
 
 
 #: artifact filename -> deterministic-subtree extractor
-ARTIFACTS: Dict[str, Callable[[dict], dict]] = {
+ARTIFACTS: dict[str, Callable[[dict], dict]] = {
     "BENCH_conv_fused.json": _conv_fused_fields,
     "BENCH_fc_batch.json": _fc_batch_fields,
     "BENCH_pipeline.json": _pipeline_fields,
@@ -101,7 +101,7 @@ ARTIFACTS: Dict[str, Callable[[dict], dict]] = {
 }
 
 
-def _diff(base, fresh, path: str, out: List[str]) -> None:
+def _diff(base, fresh, path: str, out: list[str]) -> None:
     """Recursive structural diff; baseline keys must all survive with
     equal values (fresh may add new keys — new configs are not a
     regression)."""
@@ -138,7 +138,7 @@ def _diff(base, fresh, path: str, out: List[str]) -> None:
 
 
 def check_pair(baseline_path: str, fresh_path: str,
-               extract: Callable[[dict], dict]) -> List[str]:
+               extract: Callable[[dict], dict]) -> list[str]:
     """Diff one artifact pair; returns the list of regressions."""
     with open(baseline_path) as fh:
         base = extract(json.load(fh))
@@ -147,12 +147,12 @@ def check_pair(baseline_path: str, fresh_path: str,
     if not base:
         return [f"{baseline_path}: no deterministic fields found "
                 "(unrecognized artifact layout?)"]
-    diffs: List[str] = []
+    diffs: list[str] = []
     _diff(base, fresh, os.path.basename(baseline_path), diffs)
     return diffs
 
 
-def generate_fresh(out_dir: str) -> List[str]:
+def generate_fresh(out_dir: str) -> list[str]:
     """Regenerate the fast-tier artifacts (the tier the committed
     baselines are) into ``out_dir``; returns generation errors.
 
@@ -181,7 +181,7 @@ def generate_fresh(out_dir: str) -> List[str]:
     # execution-independent by construction — skip the real-kernel waves
     # (and their parity checks, which the test/bench jobs already ran)
     zoo_serve.EXECUTE = False
-    errors: List[str] = []
+    errors: list[str] = []
     for mod, name in ((conv_fused, "BENCH_conv_fused.json"),
                       (fc_batch, "BENCH_fc_batch.json"),
                       (pipeline_serve, "BENCH_pipeline.json"),
@@ -223,7 +223,7 @@ def main() -> None:
 
     with tempfile.TemporaryDirectory() as tmp:
         fresh_dir = args.fresh_dir
-        failures: List[str] = []
+        failures: list[str] = []
         if args.generate:
             fresh_dir = tmp
             failures.extend(generate_fresh(tmp))

@@ -31,7 +31,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +42,7 @@ except ImportError:                     # direct script execution
     from timing import interleaved_medians, raise_on_failed_checks, \
         run_emit_cli
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 #: Accelerator-class on-chip budgets for the headline configs: inside
 #: each window, AlexNet conv1's fused-pool plan keeps tap fusion (the
@@ -165,7 +164,7 @@ def _ab_wall(fused_fn, unfused_fn, x, *, reps: int, trials: int) -> dict:
 
 
 def bench_net(net: str, width_mult: float, in_res: int, batch: int = 1,
-              vmem_budget: Optional[int] = None, *,
+              vmem_budget: int | None = None, *,
               reps: int = 3, trials: int = 7) -> dict:
     import numpy as np
 
@@ -239,12 +238,12 @@ def bench_net(net: str, width_mult: float, in_res: int, batch: int = 1,
 
 
 def emit(out_path: str = "BENCH_conv_fused.json", *,
-         tier: str = "fast") -> List[Row]:
+         tier: str = "fast") -> list[Row]:
     """Run the benchmark, write the JSON artifact, return CSV rows for
     benchmarks/run.py."""
     results = {"bench": "conv_fused", "tier": tier,
                "backend": "pallas-interpret-cpu", "nets": []}
-    rows: List[Row] = []
+    rows: list[Row] = []
     for net, wm, res, batch, budget, reps, trials in CONFIGS[tier]:
         r = bench_net(net, wm, res, batch, budget, reps=reps, trials=trials)
         results["nets"].append(r)
@@ -278,7 +277,7 @@ def emit(out_path: str = "BENCH_conv_fused.json", *,
     return rows
 
 
-def bench_rows() -> List[Row]:
+def bench_rows() -> list[Row]:
     """run.py group entry: fast tier, writes BENCH_conv_fused.json."""
     return emit("BENCH_conv_fused.json", tier="fast")
 

@@ -29,7 +29,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -41,7 +40,7 @@ except ImportError:                     # direct script execution
     from timing import interleaved_medians, raise_on_failed_checks, \
         run_emit_cli, seeded_payloads
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 #: Serving batches the planner section sweeps (real AlexNet head shapes).
 PLANNER_BATCHES = (1, 4, 16, 64, 256)
@@ -160,7 +159,7 @@ def wall_section(net: str, width_mult: float, batches, *,
 
 
 def emit(out_path: str = "BENCH_fc_batch.json", *,
-         tier: str = "fast") -> List[Row]:
+         tier: str = "fast") -> list[Row]:
     """Run the benchmark, write the JSON artifact, return CSV rows for
     benchmarks/run.py."""
     planner = planner_section()
@@ -199,7 +198,7 @@ def emit(out_path: str = "BENCH_fc_batch.json", *,
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2)
 
-    rows: List[Row] = []
+    rows: list[Row] = []
     for b in planner["batches"]:
         e = pb[str(b)]
         rows.append((f"fc_batch/planner/alexnet_head_b{b}", 0.0,
@@ -222,7 +221,7 @@ def emit(out_path: str = "BENCH_fc_batch.json", *,
     return rows
 
 
-def bench_rows() -> List[Row]:
+def bench_rows() -> list[Row]:
     """run.py group entry: fast tier, writes BENCH_fc_batch.json."""
     return emit("BENCH_fc_batch.json", tier="fast")
 

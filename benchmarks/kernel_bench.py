@@ -9,7 +9,6 @@ the figure of merit the SA-CONV/SA-FC designs optimize.
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +18,7 @@ try:                                    # package import (benchmarks.run)
 except ImportError:                     # direct script execution
     from timing import median_wall_us
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 
 def _time(fn, *args, reps=5):
@@ -27,7 +26,7 @@ def _time(fn, *args, reps=5):
     return median_wall_us(lambda: fn(*args), reps=reps, trials=3)
 
 
-def matmul_planner() -> List[Row]:
+def matmul_planner() -> list[Row]:
     from repro.core.dataflow import compulsory_bytes, plan_matmul
     rows = []
     cases = [("train_proj", 8192, 8192, 8192),
@@ -45,7 +44,7 @@ def matmul_planner() -> List[Row]:
     return rows
 
 
-def conv_planner() -> List[Row]:
+def conv_planner() -> list[Row]:
     """The conv-aware planner on the paper's own layers: analytic HBM
     traffic of the implicit-GEMM schedule (maxpool fused into the flush
     epilogue where the spec has a trailing pool) vs. the compulsory
@@ -75,7 +74,7 @@ def conv_planner() -> List[Row]:
     return rows
 
 
-def conv_kernels() -> List[Row]:
+def conv_kernels() -> list[Row]:
     """Implicit-GEMM SA-CONV vs. the deleted materialized-im2col path on an
     AlexNet conv2-shaped layer (27x27x96 -> 256, 5x5, pad 2)."""
     from repro.kernels.conv2d import conv2d_im2col, conv2d_mpna
@@ -94,7 +93,7 @@ def conv_kernels() -> List[Row]:
     ]
 
 
-def kernels_interpret() -> List[Row]:
+def kernels_interpret() -> list[Row]:
     from repro.kernels import ref
     from repro.kernels.sa_conv import sa_conv_matmul
     from repro.kernels.sa_fc import sa_fc_matmul
@@ -122,7 +121,7 @@ def kernels_interpret() -> List[Row]:
     return rows
 
 
-def engine_dispatch() -> List[Row]:
+def engine_dispatch() -> list[Row]:
     """The heterogeneous-dispatch decision itself (per-op planning cost),
     and the same op resolved by LayerSchedule lookup instead."""
     from repro.configs.base import ModelConfig
@@ -158,7 +157,7 @@ def engine_dispatch() -> List[Row]:
             ("engine/schedule_memo_hit", memo_us, "cached object")]
 
 
-def dispatch_census() -> List[Row]:
+def dispatch_census() -> list[Row]:
     """Per-arch regime census: how many of each architecture's matmuls the
     MPNA engine routes to each array, train vs decode (the integration of
     the paper's technique with the assigned pool)."""

@@ -6,9 +6,8 @@ is the paper-comparable number; ``benchmarks.run`` prints the CSV.
 from __future__ import annotations
 
 import time
-from typing import List, Tuple
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 
 def _timeit(fn, *args, reps: int = 3):
@@ -19,7 +18,7 @@ def _timeit(fn, *args, reps: int = 3):
     return (time.perf_counter() - t0) / reps * 1e6, out
 
 
-def fig1() -> List[Row]:
+def fig1() -> list[Row]:
     from repro.core.perf_model import fig1_speedups
     us, sp = _timeit(fig1_speedups)
     rows = []
@@ -29,7 +28,7 @@ def fig1() -> List[Row]:
     return rows
 
 
-def fig12a() -> List[Row]:
+def fig12a() -> list[Row]:
     from repro.core.perf_model import fig12a_safc_speedup
     us, v = _timeit(fig12a_safc_speedup)
     _, vb = _timeit(lambda: fig12a_safc_speedup(bw_limited=True))
@@ -38,14 +37,14 @@ def fig12a() -> List[Row]:
             ("fig12a/safc_fc_speedup_dram_capped", us, f"{vb:.2f}x")]
 
 
-def fig12b() -> List[Row]:
+def fig12b() -> list[Row]:
     from repro.core.perf_model import fig12b_mpna_speedup
     us, d = _timeit(fig12b_mpna_speedup)
     return [(f"fig12b/mpna_vs_conventional_{n}x{n}", us,
              f"{v:.2f}x (paper band 1.4-7.2x)") for n, v in d.items()]
 
 
-def fig12c() -> List[Row]:
+def fig12c() -> list[Row]:
     from repro.core.perf_model import fig12c_access_reduction
     us, a = _timeit(fig12c_access_reduction)
     _, v = _timeit(lambda: fig12c_access_reduction("vgg16"))
@@ -57,7 +56,7 @@ def fig12c() -> List[Row]:
              f"{f*100:.1f}% (FC weight read is irreducible)")]
 
 
-def fig12e() -> List[Row]:
+def fig12e() -> list[Row]:
     from repro.core.perf_model import fig12e_energy_saving
     us, v = _timeit(fig12e_energy_saving)
     _, a = _timeit(lambda: fig12e_energy_saving("alexnet"))
@@ -65,7 +64,7 @@ def fig12e() -> List[Row]:
             ("fig12e/energy_saving_alexnet", us, f"{a*100:.1f}%")]
 
 
-def table1() -> List[Row]:
+def table1() -> list[Row]:
     from repro.models.cnn import network_stats
     rows = []
     for net, pc, pf in (("alexnet", 1.07e9, 58.62e6),
@@ -82,7 +81,7 @@ def table1() -> List[Row]:
     return rows
 
 
-def table3() -> List[Row]:
+def table3() -> list[Row]:
     from repro.core.perf_model import table3_throughput
     us, t = _timeit(table3_throughput)
     return [("table3/alexnet_gops", us,
@@ -93,7 +92,7 @@ def table3() -> List[Row]:
             ("table3/alexnet_latency_ms", us, f"{t['latency_ms']:.1f}")]
 
 
-def fig6_reuse() -> List[Row]:
+def fig6_reuse() -> list[Row]:
     """Fig. 6b/c: weight reuse = |OF| for CONV, 1 for FC."""
     from repro.models.cnn import network_stats
     rows = []
@@ -108,7 +107,7 @@ def fig6_reuse() -> List[Row]:
     return rows
 
 
-def fig11_overhead() -> List[Row]:
+def fig11_overhead() -> list[Row]:
     """Fig. 11: SA-FC area/power overhead vs SA-CONV — published constants
     (2.1% / 4.4%); our double-buffer ablation quantifies the latency side."""
     from repro.core.perf_model import network_cycles

@@ -34,7 +34,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import List, Tuple
 
 import numpy as np
 
@@ -45,7 +44,7 @@ except ImportError:                     # direct script execution
     from timing import interleaved_medians, raise_on_failed_checks, \
         run_emit_cli, seeded_payloads
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 
 #: Serving mixes the modeled section sweeps: (batch, waves) per net, full
@@ -60,7 +59,7 @@ WALL_CONFIGS = {
 }
 
 
-def modeled_section(checks: List[dict]) -> dict:
+def modeled_section(checks: list[dict]) -> dict:
     """Makespan ratios + crossover batches, ASIC cycle model and TPU
     roofline — every number here is planner-side deterministic."""
     from repro.core import perf_model as PM
@@ -153,7 +152,7 @@ def _serve_once(net: str, params, images, *, in_res: int, width_mult: float,
 
 def wall_section(width_mult: float, in_res: int, n_req: int,
                  microbatch: int, *, reps: int, trials: int,
-                 checks: List[dict]) -> dict:
+                 checks: list[dict]) -> dict:
     """Interleaved-median wall A/B of the pipelined vs sequential server
     draining the same queue, plus the bitwise parity check."""
     import jax
@@ -192,11 +191,11 @@ def wall_section(width_mult: float, in_res: int, n_req: int,
 
 
 def emit(out_path: str = "BENCH_pipeline.json", *,
-         tier: str = "fast") -> List[Row]:
+         tier: str = "fast") -> list[Row]:
     """Run the benchmark, write the JSON artifact, return CSV rows for
     benchmarks/run.py.  Raises :class:`BenchConsistencyError` (after
     writing the artifact) when any internal check fails."""
-    checks: List[dict] = []
+    checks: list[dict] = []
     modeled = modeled_section(checks)
     walls = [wall_section(wm, res, n, mb, reps=reps, trials=trials,
                           checks=checks)
@@ -226,7 +225,7 @@ def emit(out_path: str = "BENCH_pipeline.json", *,
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2)
 
-    rows: List[Row] = []
+    rows: list[Row] = []
     for net, data in modeled["nets"].items():
         for m in data["mixes"]:
             rows.append((
@@ -255,7 +254,7 @@ def emit(out_path: str = "BENCH_pipeline.json", *,
     return rows
 
 
-def bench_rows() -> List[Row]:
+def bench_rows() -> list[Row]:
     """run.py group entry: fast tier, writes BENCH_pipeline.json."""
     return emit("BENCH_pipeline.json", tier="fast")
 

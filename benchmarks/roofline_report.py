@@ -6,13 +6,12 @@ from __future__ import annotations
 import glob
 import json
 import os
-from typing import List, Tuple
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
 OUT_MD = os.path.join(os.path.dirname(__file__), "results", "roofline.md")
 
 
-def load() -> List[dict]:
+def load() -> list[dict]:
     recs = []
     for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
         with open(p) as f:
@@ -33,7 +32,7 @@ def _fmt(rec: dict) -> str:
             f"| {rec['roofline_fraction']*100:.1f}% |")
 
 
-def write_markdown(recs: List[dict]) -> str:
+def write_markdown(recs: list[dict]) -> str:
     lines = [
         "# Roofline table (dry-run derived; TPU v5e terms)",
         "",
@@ -53,7 +52,7 @@ def write_markdown(recs: List[dict]) -> str:
     return md
 
 
-def rows() -> List[Tuple[str, float, str]]:
+def rows() -> list[tuple[str, float, str]]:
     recs = load()
     if not recs:
         return [("roofline/no_dryrun_results", 0.0,

@@ -22,14 +22,15 @@ from __future__ import annotations
 import statistics
 import sys
 import time
-from typing import Any, Callable, Dict, List, Mapping, Sequence, Tuple
+from collections.abc import Callable, Mapping, Sequence
+from typing import Any
 
 import jax
 import numpy as np
 
 
 def seeded_payloads(n: int, shape: Sequence[int], *, seed: int = 0,
-                    dtype=np.float32) -> List[np.ndarray]:
+                    dtype=np.float32) -> list[np.ndarray]:
     """``n`` deterministic request payloads of ``shape`` (standard-normal,
     one PCG64 stream per call) — the single image/activation source the
     serving benchmarks share."""
@@ -39,7 +40,7 @@ def seeded_payloads(n: int, shape: Sequence[int], *, seed: int = 0,
 
 
 def poisson_arrivals(n: int, rate_hz: float, *,
-                     seed: int = 0) -> Tuple[float, ...]:
+                     seed: int = 0) -> tuple[float, ...]:
     """``n`` deterministic Poisson arrival times (cumulative exponential
     inter-arrivals at ``rate_hz``, seeded PCG64) — the shared arrival
     trace for open-loop load generation."""
@@ -57,7 +58,7 @@ class BenchConsistencyError(AssertionError):
     never silently publish a JSON whose own invariants don't hold."""
 
 
-def raise_on_failed_checks(checks: List[Dict[str, Any]]) -> None:
+def raise_on_failed_checks(checks: list[dict[str, Any]]) -> None:
     """Raise :class:`BenchConsistencyError` naming every failed check.
     Call after the artifact is written so the failure is recorded AND the
     process exits nonzero."""
@@ -83,7 +84,7 @@ def run_emit_cli(emit: Callable[..., list], out_path: str,
 
 def interleaved_medians(fns: Mapping[str, Callable[[], Any]], *,
                         reps: int = 3, trials: int = 7,
-                        warmup: bool = True) -> Dict[str, float]:
+                        warmup: bool = True) -> dict[str, float]:
     """Median over ``trials`` of the per-call mean wall seconds for each
     variant, with the variants interleaved inside every trial.
 
@@ -94,7 +95,7 @@ def interleaved_medians(fns: Mapping[str, Callable[[], Any]], *,
     if warmup:
         for fn in fns.values():
             jax.block_until_ready(fn())
-    samples: Dict[str, list] = {name: [] for name in fns}
+    samples: dict[str, list] = {name: [] for name in fns}
     for _ in range(trials):
         for name, fn in fns.items():
             t0 = time.perf_counter()

@@ -33,7 +33,6 @@ import argparse
 import json
 import os
 import time
-from typing import Dict, List, Tuple
 
 import numpy as np
 
@@ -44,7 +43,7 @@ except ImportError:                     # direct script execution
     from timing import poisson_arrivals, raise_on_failed_checks, \
         run_emit_cli, seeded_payloads
 
-Row = Tuple[str, float, str]
+Row = tuple[str, float, str]
 
 #: Execution geometry: width-scaled models (interpret-mode Pallas on CPU),
 #: full-geometry cost model.  max_batch caps every model's wave size.
@@ -87,7 +86,7 @@ POLICY_NAMES = ("fifo", "smf", "edf")
 EXECUTE = True
 
 
-def make_trace(tier: str) -> List[dict]:
+def make_trace(tier: str) -> list[dict]:
     """The seeded mixed request stream: per-tenant Poisson arrivals +
     seeded payloads, merged by arrival time, uids in arrival order.
     Returns plain dicts so each policy run can materialize fresh
@@ -110,9 +109,9 @@ def make_trace(tier: str) -> List[dict]:
     return raw
 
 
-def run_policy(policy_name: str, trace: List[dict], *,
-               execute: bool, refs: Dict[int, np.ndarray],
-               checks: List[dict]):
+def run_policy(policy_name: str, trace: list[dict], *,
+               execute: bool, refs: dict[int, np.ndarray],
+               checks: list[dict]):
     """One full drain of the seeded trace under ``policy_name``; returns
     the ZooReport.  When executing, every request's logits are checked
     bitwise against the cached single-model unbatched reference."""
@@ -136,7 +135,7 @@ def run_policy(policy_name: str, trace: List[dict], *,
             q.clear()
         decisions, _ = zoo._schedule(requests)
         from repro.serve.zoo import ZooReport
-        by_tenant: Dict[str, list] = {}
+        by_tenant: dict[str, list] = {}
         for r in requests:
             by_tenant.setdefault(r.tenant, []).append(r)
         return ZooReport(
@@ -161,7 +160,7 @@ def run_policy(policy_name: str, trace: List[dict], *,
     return report
 
 
-def unbatched_refs(trace: List[dict]) -> Dict[int, np.ndarray]:
+def unbatched_refs(trace: list[dict]) -> dict[int, np.ndarray]:
     """uid -> the single-model unbatched forward of each request through
     its model's own params/engine — the parity reference every policy's
     coalesced logits must match bitwise."""
@@ -213,14 +212,14 @@ def _report_doc(report) -> dict:
 
 
 def emit(out_path: str = "BENCH_zoo.json", *, tier: str = "fast"
-         ) -> List[Row]:
+         ) -> list[Row]:
     """Run the benchmark, write the JSON artifact, return CSV rows for
     benchmarks/run.py.  Raises
     :class:`~benchmarks.timing.BenchConsistencyError` (after writing the
     artifact) when any internal check fails."""
     from repro.serve.zoo import build_zoo
 
-    checks: List[dict] = []
+    checks: list[dict] = []
     trace = make_trace(tier)
     refs = unbatched_refs(trace) if EXECUTE else {}
 
@@ -292,7 +291,7 @@ def emit(out_path: str = "BENCH_zoo.json", *, tier: str = "fast"
     with open(out_path, "w") as fh:
         json.dump(results, fh, indent=2)
 
-    rows: List[Row] = []
+    rows: list[Row] = []
     for name in POLICY_NAMES:
         p = policies[name]
         rows.append((
@@ -308,7 +307,7 @@ def emit(out_path: str = "BENCH_zoo.json", *, tier: str = "fast"
     return rows
 
 
-def bench_rows() -> List[Row]:
+def bench_rows() -> list[Row]:
     """run.py group entry: fast tier, writes BENCH_zoo.json."""
     return emit("BENCH_zoo.json", tier="fast")
 

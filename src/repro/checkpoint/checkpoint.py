@@ -21,7 +21,7 @@ import json
 import os
 import shutil
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 import numpy as np
@@ -33,11 +33,11 @@ class Checkpointer:
     def __init__(self, directory: str, keep: int = 3):
         self.dir = directory
         self.keep = keep
-        self._thread: Optional[threading.Thread] = None
+        self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
     # -- write ------------------------------------------------------------
-    def save(self, step: int, tree: Any, extra: Optional[dict] = None,
+    def save(self, step: int, tree: Any, extra: dict | None = None,
              async_save: bool = False) -> None:
         self.wait()
         leaves, treedef = jax.tree.flatten(tree)
@@ -91,12 +91,12 @@ class Checkpointer:
                 out.append(int(name[5:]))
         return sorted(out)
 
-    def latest_step(self) -> Optional[int]:
+    def latest_step(self) -> int | None:
         s = self.steps()
         return s[-1] if s else None
 
-    def restore(self, like: Any, step: Optional[int] = None,
-                shardings: Any = None) -> Tuple[Any, int, dict]:
+    def restore(self, like: Any, step: int | None = None,
+                shardings: Any = None) -> tuple[Any, int, dict]:
         """``like`` supplies the treedef; ``shardings`` (optional pytree of
         jax.sharding.Sharding) re-shards onto the *current* mesh."""
         step = step if step is not None else self.latest_step()

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Any, Optional, Tuple
+from typing import Any
 
 # ---------------------------------------------------------------------------
 # Layer-pattern vocabulary (heterogeneous stacks scan over a repeating block)
@@ -62,7 +62,7 @@ class ModelConfig:
     head_dim: int = 0                  # 0 -> derived d_model // n_heads
     sliding_window: int = 4096
     # repeating layer pattern; empty -> [ATTN_GLOBAL] * n_layers homogeneous
-    layer_pattern: Tuple[str, ...] = ()
+    layer_pattern: tuple[str, ...] = ()
     logit_softcap: float = 0.0         # gemma2 final-logit softcap
     attn_softcap: float = 0.0          # gemma2 attention-logit softcap
     rope_theta: float = 10_000.0
@@ -73,8 +73,8 @@ class ModelConfig:
     tie_embeddings: bool = False
 
     # mixtures / ssm ---------------------------------------------------------
-    moe: Optional[MoEConfig] = None
-    ssm: Optional[SSMConfig] = None
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
 
     # enc-dec (seamless-m4t) -------------------------------------------------
     enc_dec: bool = False
@@ -99,7 +99,7 @@ class ModelConfig:
         return 0
 
     @property
-    def pattern(self) -> Tuple[str, ...]:
+    def pattern(self) -> tuple[str, ...]:
         if self.layer_pattern:
             return self.layer_pattern
         return (ATTN_GLOBAL,)
@@ -123,7 +123,7 @@ class ModelConfig:
             return True                       # SWA / local:global mixes
         return False
 
-    def block_kinds(self) -> Tuple[Tuple[str, str], ...]:
+    def block_kinds(self) -> tuple[tuple[str, str], ...]:
         """One pattern period resolved to (attn_kind, mlp_kind) pairs.
 
         ``mlp_kind`` in {dense, moe, none}.  A pattern entry may force it
@@ -142,7 +142,7 @@ class ModelConfig:
             out.append((k, m))
         return tuple(out)
 
-    def stack_shape(self) -> Tuple[int, int]:
+    def stack_shape(self) -> tuple[int, int]:
         """(reps, remainder) of the pattern over n_layers."""
         p = len(self.pattern)
         return self.n_layers // p, self.n_layers % p
@@ -225,7 +225,7 @@ class ShapeConfig:
     kind: str                 # train | prefill | decode
 
 
-SHAPES: Tuple[ShapeConfig, ...] = (
+SHAPES: tuple[ShapeConfig, ...] = (
     ShapeConfig("train_4k", 4096, 256, "train"),
     ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
     ShapeConfig("decode_32k", 32_768, 128, "decode"),

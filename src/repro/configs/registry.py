@@ -3,7 +3,6 @@ from __future__ import annotations
 
 import importlib
 from dataclasses import dataclass
-from typing import Dict
 
 from repro.configs.base import ModelConfig
 
@@ -31,7 +30,7 @@ def get_config(arch: str) -> ModelConfig:
     return mod.CONFIG
 
 
-def all_lm_configs() -> Dict[str, ModelConfig]:
+def all_lm_configs() -> dict[str, ModelConfig]:
     return {a: get_config(a) for a in _LM_MODULES}
 
 
@@ -58,7 +57,7 @@ class ZooModelSpec:
         return 1 if self.weight_dtype == "int8" else 4
 
 
-ZOO_MODELS: Dict[str, ZooModelSpec] = {
+ZOO_MODELS: dict[str, ZooModelSpec] = {
     "alexnet": ZooModelSpec("alexnet", "alexnet", "float32", 227),
     "vgg16": ZooModelSpec("vgg16", "vgg16", "float32", 224),
     "alexnet-int8": ZooModelSpec("alexnet-int8", "alexnet", "int8", 227),

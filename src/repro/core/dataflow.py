@@ -29,7 +29,6 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
-from typing import Optional, Tuple
 
 from repro.core.accelerator import TPU_V5E, TPUChip
 
@@ -54,6 +53,46 @@ def _round_down_pow2ish(x: int, m: int) -> int:
     return max(m, (x // m) * m)
 
 
+class PlanError(ValueError):
+    """A planner search found no feasible tiling (or refused the request).
+
+    Raised instead of a bare ``AssertionError`` so callers can react to
+    *planning* failures specifically: the error carries the op identity
+    (``op`` — dispatch name when the failure surfaced through an
+    :class:`~repro.core.engine.Engine`, else the planner entrypoint),
+    the GEMM shape, and the VMEM budget that was too small, so the
+    diagnostic names the exact infeasible request instead of a bare
+    "budget too small"."""
+
+    def __init__(self, message: str, *, op: str = "",
+                 shape: tuple[int, ...] = (),
+                 vmem_budget: int | None = None) -> None:
+        self.op = op
+        self.shape = tuple(shape)
+        self.vmem_budget = vmem_budget
+        detail = []
+        if op:
+            detail.append(f"op={op!r}")
+        if shape:
+            detail.append(f"shape={self.shape!r}")
+        if vmem_budget is not None:
+            detail.append(f"vmem_budget={vmem_budget}")
+        super().__init__(
+            f"{message} [{', '.join(detail)}]" if detail else message)
+
+    @property
+    def message(self) -> str:
+        return str(self.args[0]) if self.args else ""
+
+    def with_op(self, op: str) -> PlanError:
+        """The same failure, attributed to a named dispatch site."""
+        if self.op:
+            return self
+        base = self.message.split(" [", 1)[0]
+        return PlanError(base, op=op, shape=self.shape,
+                         vmem_budget=self.vmem_budget)
+
+
 @dataclass(frozen=True)
 class MatmulPlan:
     """Tiling decision + analytic HBM traffic for one (M,K)x(K,N) matmul."""
@@ -71,7 +110,7 @@ class MatmulPlan:
     def arithmetic_intensity(self) -> float:
         return self.flops / max(1, self.hbm_bytes)
 
-    def grid(self, m: int, n: int, k: int) -> Tuple[int, int, int]:
+    def grid(self, m: int, n: int, k: int) -> tuple[int, int, int]:
         return (math.ceil(m / self.bm), math.ceil(n / self.bn),
                 math.ceil(k / self.bk))
 
@@ -200,7 +239,11 @@ def plan_matmul(m: int, n: int, k: int, *,
                 t = traffic(min(bm4, mp), min(bn4, np_), min(bk4, kp))
                 if best4 is None or t < best4[0]:
                     best4 = (t, min(bm4, mp), min(bn4, np_), min(bk4, kp))
-    assert best4 is not None, "VMEM budget too small for minimum tile"
+    if best4 is None:
+        raise PlanError(
+            "VMEM budget too small for the minimum SA-CONV matmul tile "
+            f"({vmem(SUBLANE, LANE, LANE)} bytes)",
+            op="plan_matmul", shape=(m, n, k), vmem_budget=budget)
     candidates.append((4, best4[1], best4[2], best4[3]))
 
     # Cap every candidate at the kernels' maximum block edge so the plan's
@@ -292,7 +335,7 @@ class FCPlan:
         """The amortization headline: streamed weight bytes per sample."""
         return self.weight_hbm_bytes / max(1, self.b)
 
-    def grid(self, b: int, n: int, k: int) -> Tuple[int, int, int]:
+    def grid(self, b: int, n: int, k: int) -> tuple[int, int, int]:
         return (math.ceil(_round_up(max(b, 1), SUBLANE) / self.bb),
                 math.ceil(n / self.bn), math.ceil(k / self.bk))
 
@@ -376,7 +419,7 @@ def plan_fc(b: int, n: int, k: int, *,
         return fc_vmem_bytes(bb, bn, bk, bytes_in=bytes_in, bytes_w=bw,
                              bytes_out=bytes_out)
 
-    def grids(bb: int, bn: int, bk: int) -> Tuple[int, int, int]:
+    def grids(bb: int, bn: int, bk: int) -> tuple[int, int, int]:
         return (math.ceil(bp / bb), math.ceil(np_ / bn),
                 math.ceil(kp / bk))
 
@@ -407,9 +450,11 @@ def plan_fc(b: int, n: int, k: int, *,
                        -(bn * bk))
                 if best is None or key < best[0]:
                     best = (key, bb, bn, bk)
-    assert best is not None, \
-        f"VMEM budget {budget} too small for the minimum SA-FC tile " \
-        f"({fc_vmem_bytes(SUBLANE, LANE, LANE, bytes_in=bytes_in, bytes_w=bw, bytes_out=bytes_out)} bytes)"
+    if best is None:
+        raise PlanError(
+            "VMEM budget too small for the minimum SA-FC tile "
+            f"({fc_vmem_bytes(SUBLANE, LANE, LANE, bytes_in=bytes_in, bytes_w=bw, bytes_out=bytes_out)} bytes)",
+            op="plan_fc", shape=(b, n, k), vmem_budget=budget)
     _, bb, bn, bk = best
     return FCPlan(case(bb, bn, bk), regime, bb, bn, bk,
                   hbm_bytes=traffic(bb, bn, bk), flops=2 * b * n * k,
@@ -449,7 +494,7 @@ class PoolSpec:
         if self.stride == 0:
             object.__setattr__(self, "stride", self.window)
 
-    def out(self, oh: int, ow: int) -> Tuple[int, int]:
+    def out(self, oh: int, ow: int) -> tuple[int, int]:
         return ((oh - self.window) // self.stride + 1,
                 (ow - self.window) // self.stride + 1)
 
@@ -512,7 +557,7 @@ class ConvPlan:
     def arithmetic_intensity(self) -> float:
         return self.flops / max(1, self.hbm_bytes)
 
-    def grid(self, batch: int, ci: int, co: int) -> Tuple[int, int, int]:
+    def grid(self, batch: int, ci: int, co: int) -> tuple[int, int, int]:
         return (batch, math.ceil(co / self.bj), math.ceil(ci / self.bi))
 
 
@@ -561,7 +606,7 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
               vmem_budget: int | None = None,
               chip: TPUChip = TPU_V5E,
               regime: str | None = None,
-              pool: Optional[PoolSpec] = None,
+              pool: PoolSpec | None = None,
               act: str = "none") -> ConvPlan:
     """Pick channel tiles + loop order for an NHWC x HWIO VALID conv.
 
@@ -626,7 +671,7 @@ def plan_conv(batch: int, h: int, w: int, ci: int,
         return (oh * ow * p * q * bi <= TAP_FUSE_ELEMS
                 and vmem(bi, bj, True) <= budget)
 
-    def grids(bi: int, bj: int) -> Tuple[int, int]:
+    def grids(bi: int, bj: int) -> tuple[int, int]:
         return math.ceil(ci / bi), math.ceil(co / bj)
 
     def traffic(bi: int, bj: int) -> int:
@@ -707,7 +752,7 @@ def compulsory_conv_bytes(batch: int, h: int, w: int, ci: int,
                           stride: int = 1,
                           bytes_in: int = 2, bytes_out: int = 4,
                           bytes_w: int | None = None,
-                          pool: Optional[PoolSpec] = None) -> int:
+                          pool: PoolSpec | None = None) -> int:
     """Lower bound for the conv: every NHWC/HWIO byte touched exactly once
     (what the paper's Fig. 5/7 reuse maximization drives toward).  With
     ``pool`` the op is the fused conv+maxpool and its irreducible output

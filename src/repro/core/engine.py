@@ -43,7 +43,8 @@ import dataclasses
 import functools
 import threading
 from dataclasses import dataclass
-from typing import Any, Iterator, List, Optional, Tuple
+from collections.abc import Iterator
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -75,18 +76,18 @@ class DispatchRecord:
     dtype: str = ""             # activation dtype
     weight_dtype: str = ""      # 'int8' for QTensor weights
     schedule: str = ""          # 'hit' | 'miss' | '' (no schedule attached)
-    plan: Optional[MatmulPlan] = None
+    plan: MatmulPlan | None = None
     # FC dispatches routed to the batch-amortized SA-FC dataflow carry the
     # batch-tiled plan (weight stream charged once per batch tile) instead
     # of a MatmulPlan
-    fc_plan: Optional[FCPlan] = None
+    fc_plan: FCPlan | None = None
     # CONV dispatches: the conv plan plus the layer geometry
     # (batch, h, w, ci, p, q, co, stride) — h/w are the padded input dims.
-    conv_plan: Optional[ConvPlan] = None
-    conv_shape: Optional[Tuple[int, ...]] = None
+    conv_plan: ConvPlan | None = None
+    conv_shape: tuple[int, ...] | None = None
     # the maxpool stage requested to ride this conv's flush epilogue; the
     # accepted/declined decision is conv_plan.fuse_pool
-    pool: Optional[PoolSpec] = None
+    pool: PoolSpec | None = None
     # dual-array pipeline tags (set via Engine.tagging): which pipeline
     # stage issued this dispatch ('conv' | 'fc' | '') and which serving
     # wave it belongs to (-1 = untagged)
@@ -108,7 +109,7 @@ class DispatchTrace:
     working unchanged."""
 
     def __init__(self) -> None:
-        self.records: List[DispatchRecord] = []
+        self.records: list[DispatchRecord] = []
 
     def append(self, rec: DispatchRecord) -> None:
         self.records.append(rec)
@@ -122,14 +123,14 @@ class DispatchTrace:
     def __getitem__(self, i):
         return self.records[i]
 
-    def by_regime(self, regime: str) -> List[DispatchRecord]:
+    def by_regime(self, regime: str) -> list[DispatchRecord]:
         return [r for r in self.records if r.regime == regime]
 
-    def by_stage(self, stage: str) -> List[DispatchRecord]:
+    def by_stage(self, stage: str) -> list[DispatchRecord]:
         """Records a given pipeline stage dispatched ('conv' | 'fc')."""
         return [r for r in self.records if r.stage == stage]
 
-    def by_wave(self, wave: int) -> List[DispatchRecord]:
+    def by_wave(self, wave: int) -> list[DispatchRecord]:
         """Records a given serving wave dispatched."""
         return [r for r in self.records if r.wave == wave]
 
@@ -171,9 +172,9 @@ class DispatchPolicy:
     ``overrides`` pins ops by exact name, mirroring the per-layer
     exceptions a hand-tuned offline schedule would carry."""
     chip: TPUChip = TPU_V5E
-    vmem_budget: Optional[int] = None
-    force_regime: Optional[str] = None          # 'sa_conv' | 'sa_fc'
-    overrides: Tuple[Tuple[str, str], ...] = ()  # (op name -> regime)
+    vmem_budget: int | None = None
+    force_regime: str | None = None          # 'sa_conv' | 'sa_fc'
+    overrides: tuple[tuple[str, str], ...] = ()  # (op name -> regime)
 
     def __post_init__(self) -> None:
         regimes = (None, "sa_conv", "sa_fc")
@@ -186,7 +187,7 @@ class DispatchPolicy:
                                  f"{reg!r}; must be one of {regimes[1:]}")
 
     def regime_for(self, name: str, m: int, n: int, k: int, *,
-                   act_bytes: int, weight_bytes: Optional[int] = None) -> str:
+                   act_bytes: int, weight_bytes: int | None = None) -> str:
         for pat, reg in self.overrides:
             if name == pat:
                 return reg
@@ -196,15 +197,15 @@ class DispatchPolicy:
                                         bytes_w=weight_bytes)
 
     def plan(self, m: int, n: int, k: int, *, act_bytes: int,
-             weight_bytes: Optional[int] = None,
-             regime: Optional[str] = None) -> MatmulPlan:
+             weight_bytes: int | None = None,
+             regime: str | None = None) -> MatmulPlan:
         return _cached_plan(self, m, n, k, act_bytes,
                             weight_bytes if weight_bytes is not None
                             else act_bytes, regime)
 
     def plan_fc(self, b: int, n: int, k: int, *, act_bytes: int,
-                weight_bytes: Optional[int] = None,
-                regime: Optional[str] = None) -> FCPlan:
+                weight_bytes: int | None = None,
+                regime: str | None = None) -> FCPlan:
         """Batch-amortized SA-FC planning under this policy's chip/VMEM
         budget — the FC twin of :meth:`plan`: the resident batch tile is
         the weight-amortization lever, the weight stream is charged once
@@ -224,7 +225,7 @@ class DispatchPolicy:
     def conv_regime_for(self, name: str, batch: int, h: int, w: int,
                         ci: int, p: int, q: int, co: int, stride: int, *,
                         act_bytes: int,
-                        weight_bytes: Optional[int] = None) -> str:
+                        weight_bytes: int | None = None) -> str:
         """Conv twin of :meth:`regime_for`: same override/force precedence,
         but the intensity fallback costs *real NHWC bytes* (not the
         patch-matrix GEMM view, which would tag compute-bound convs as
@@ -240,9 +241,9 @@ class DispatchPolicy:
 
     def plan_conv(self, batch: int, h: int, w: int, ci: int,
                   p: int, q: int, co: int, stride: int, *, act_bytes: int,
-                  weight_bytes: Optional[int] = None,
-                  regime: Optional[str] = None,
-                  pool: Optional[PoolSpec] = None,
+                  weight_bytes: int | None = None,
+                  regime: str | None = None,
+                  pool: PoolSpec | None = None,
                   act: str = "none") -> ConvPlan:
         """Conv-aware planning under this policy's chip/VMEM budget —
         the CONV twin of :meth:`plan` (traffic counted in real NHWC bytes,
@@ -258,7 +259,7 @@ class DispatchPolicy:
 @functools.lru_cache(maxsize=4096)
 def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
                  act_bytes: int, weight_bytes: int,
-                 regime: Optional[str]) -> MatmulPlan:
+                 regime: str | None) -> MatmulPlan:
     return dataflow.plan_matmul(
         m, n, k, bytes_in=act_bytes, bytes_w=weight_bytes,
         vmem_budget=policy.vmem_budget, chip=policy.chip, regime=regime)
@@ -267,7 +268,7 @@ def _cached_plan(policy: DispatchPolicy, m: int, n: int, k: int,
 @functools.lru_cache(maxsize=4096)
 def _cached_fc_plan(policy: DispatchPolicy, b: int, n: int, k: int,
                     act_bytes: int, weight_bytes: int,
-                    regime: Optional[str]) -> FCPlan:
+                    regime: str | None) -> FCPlan:
     return dataflow.plan_fc(
         b, n, k, bytes_in=act_bytes, bytes_w=weight_bytes,
         vmem_budget=policy.vmem_budget, chip=policy.chip, regime=regime)
@@ -277,8 +278,8 @@ def _cached_fc_plan(policy: DispatchPolicy, b: int, n: int, k: int,
 def _cached_conv_plan(policy: DispatchPolicy, batch: int, h: int, w: int,
                       ci: int, p: int, q: int, co: int, stride: int,
                       act_bytes: int, weight_bytes: int,
-                      regime: Optional[str],
-                      pool: Optional[PoolSpec], act: str) -> ConvPlan:
+                      regime: str | None,
+                      pool: PoolSpec | None, act: str) -> ConvPlan:
     return dataflow.plan_conv(
         batch, h, w, ci, p, q, co, stride=stride, bytes_in=act_bytes,
         bytes_w=weight_bytes, vmem_budget=policy.vmem_budget,
@@ -335,7 +336,7 @@ def _act_grad(pre, act):
 @functools.lru_cache(maxsize=256)
 def _make_pallas_vjp(act: str, regime: str, interpret: bool,
                      has_bias: bool, out_dtype,
-                     plan, vmem_limit: Optional[int] = None):
+                     plan, vmem_limit: int | None = None):
     def _bwd_core(x2d, w, bias, g):
         pre = _pallas_matmul(x2d, w, bias, "none", regime, interpret,
                              plan=plan,
@@ -457,10 +458,11 @@ class Engine:
     """
 
     def __init__(self, *, backend: str = "xla", interpret: bool = True,
-                 chip: Optional[TPUChip] = None,
-                 policy: Optional[DispatchPolicy] = None,
-                 schedule: Optional["Any"] = None,
-                 trace: Optional[DispatchTrace] = None) -> None:
+                 chip: TPUChip | None = None,
+                 policy: DispatchPolicy | None = None,
+                 schedule: Any | None = None,
+                 trace: DispatchTrace | None = None,
+                 verify_schedules: bool = False) -> None:
         if policy is None:
             policy = DispatchPolicy(chip=chip if chip is not None
                                     else TPU_V5E)
@@ -470,6 +472,12 @@ class Engine:
         self.backend = backend
         self.interpret = interpret
         self.schedule = schedule
+        # debug hook: statically verify any schedule at attach time (and
+        # through with_schedule, which round-trips this flag via with_)
+        self.verify_schedules = verify_schedules
+        if verify_schedules and schedule is not None:
+            from repro.analysis import verify_schedule
+            verify_schedule(schedule).raise_if_failed()
         # constructor-supplied trace is shared across threads (derived
         # engines); tracing() overlays a per-thread trace on top so
         # concurrent tracing() users of one engine stay isolated, like the
@@ -478,12 +486,12 @@ class Engine:
         self._trace_tls = threading.local()
 
     @property
-    def trace(self) -> Optional[DispatchTrace]:
+    def trace(self) -> DispatchTrace | None:
         tls = getattr(self._trace_tls, "trace", _TRACE_UNSET)
         return self._trace_default if tls is _TRACE_UNSET else tls
 
     @trace.setter
-    def trace(self, tr: Optional[DispatchTrace]) -> None:
+    def trace(self, tr: DispatchTrace | None) -> None:
         self._trace_tls.trace = tr
 
     @property
@@ -491,15 +499,16 @@ class Engine:
         return self.policy.chip
 
     # -- derivation ---------------------------------------------------------
-    def with_(self, **overrides: Any) -> "Engine":
+    def with_(self, **overrides: Any) -> Engine:
         """A derived engine sharing this engine's live trace."""
         kw = dict(backend=self.backend, interpret=self.interpret,
                   policy=self.policy, schedule=self.schedule,
-                  trace=self.trace)
+                  trace=self.trace,
+                  verify_schedules=self.verify_schedules)
         kw.update(overrides)
         return Engine(**kw)
 
-    def with_schedule(self, schedule) -> "Engine":
+    def with_schedule(self, schedule) -> Engine:
         return self.with_(schedule=schedule)
 
     # -- context ------------------------------------------------------------
@@ -559,7 +568,7 @@ class Engine:
 
     # -- planning -----------------------------------------------------------
     def plan_for(self, name: str, m: int, n: int, k: int, *,
-                 dtype, weight_dtype) -> Tuple[Any, str]:
+                 dtype, weight_dtype) -> tuple[Any, str]:
         """(plan, 'hit'|'miss'|'') for one named op — schedule lookup with
         policy fallback.  Ops assigned to the SA-FC array get a
         batch-amortized :class:`~repro.core.dataflow.FCPlan` (the resident
@@ -576,19 +585,25 @@ class Engine:
             state = "miss"
         regime = self.policy.regime_for(name, m, n, k, act_bytes=act_bytes,
                                         weight_bytes=w_bytes)
-        if regime == "sa_fc":
-            plan = self.policy.plan_fc(m, n, k, act_bytes=act_bytes,
-                                       weight_bytes=w_bytes, regime=regime)
-        else:
-            plan = self.policy.plan(m, n, k, act_bytes=act_bytes,
-                                    weight_bytes=w_bytes, regime=regime)
+        try:
+            if regime == "sa_fc":
+                plan = self.policy.plan_fc(m, n, k, act_bytes=act_bytes,
+                                           weight_bytes=w_bytes,
+                                           regime=regime)
+            else:
+                plan = self.policy.plan(m, n, k, act_bytes=act_bytes,
+                                        weight_bytes=w_bytes, regime=regime)
+        except dataflow.PlanError as e:
+            # the planner knows the shape/budget; the engine knows which
+            # layer asked — surface both in one typed error
+            raise e.with_op(name) from e
         return plan, state
 
     def plan_conv_for(self, name: str, batch: int, h: int, w: int, ci: int,
                       p: int, q: int, co: int, stride: int, *,
                       dtype, weight_dtype,
-                      pool: Optional[PoolSpec] = None,
-                      act: str = "none") -> Tuple[ConvPlan, str]:
+                      pool: PoolSpec | None = None,
+                      act: str = "none") -> tuple[ConvPlan, str]:
         """(conv plan, 'hit'|'miss'|'') for one named CONV op — schedule
         lookup with policy fallback.  ``h``/``w`` are the padded input
         spatial dims; ``pool`` is the maxpool stage requested to ride the
@@ -608,14 +623,17 @@ class Engine:
                                              co, stride,
                                              act_bytes=act_bytes,
                                              weight_bytes=w_bytes)
-        plan = self.policy.plan_conv(batch, h, w, ci, p, q, co, stride,
-                                     act_bytes=act_bytes,
-                                     weight_bytes=w_bytes, regime=regime,
-                                     pool=pool, act=act)
+        try:
+            plan = self.policy.plan_conv(batch, h, w, ci, p, q, co, stride,
+                                         act_bytes=act_bytes,
+                                         weight_bytes=w_bytes, regime=regime,
+                                         pool=pool, act=act)
+        except dataflow.PlanError as e:
+            raise e.with_op(name) from e
         return plan, state
 
     # -- ops ----------------------------------------------------------------
-    def matmul(self, x: jax.Array, w, bias: Optional[jax.Array] = None, *,
+    def matmul(self, x: jax.Array, w, bias: jax.Array | None = None, *,
                act: str = "none", name: str = "matmul",
                out_dtype=None) -> jax.Array:
         """``(..., k) @ (k, n)`` with fused bias+activation epilogue, routed
@@ -668,9 +686,9 @@ class Engine:
         # reshape below must not re-cast.
         return out.reshape(*lead, n)
 
-    def conv2d(self, x: jax.Array, f, bias: Optional[jax.Array] = None, *,
+    def conv2d(self, x: jax.Array, f, bias: jax.Array | None = None, *,
                stride: int = 1, pad: int = 0, act: str = "none",
-               pool: Optional[PoolSpec] = None,
+               pool: PoolSpec | None = None,
                name: str = "conv", out_dtype=None) -> jax.Array:
         """NHWC x HWIO convolution with fused bias+activation epilogue,
         planned by the engine's policy/schedule and executed on the
@@ -740,7 +758,7 @@ class Engine:
                             name=f"{name}.pool")
         return out
 
-    def pool(self, x: jax.Array, *, window: int, stride: Optional[int] = None,
+    def pool(self, x: jax.Array, *, window: int, stride: int | None = None,
              act: str = "none", name: str = "pool") -> jax.Array:
         """Standalone maxpool + activation (the paper's pooling-&-activation
         unit as its own dispatch): recorded in the trace like every other
@@ -785,7 +803,7 @@ _LOCAL = threading.local()
 _DEFAULT = Engine()
 
 
-def _engine_stack() -> List[Engine]:
+def _engine_stack() -> list[Engine]:
     stack = getattr(_LOCAL, "stack", None)
     if stack is None:
         stack = _LOCAL.stack = []
@@ -806,7 +824,7 @@ def default_engine() -> Engine:
 # ---------------------------------------------------------------------------
 # deprecation shims (legacy module-level API)
 # ---------------------------------------------------------------------------
-def matmul(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
+def matmul(x: jax.Array, w, bias: jax.Array | None = None, *,
            act: str = "none", name: str = "matmul",
            out_dtype=None) -> jax.Array:
     """Deprecated shim: ``current().matmul(...)``."""
@@ -814,9 +832,9 @@ def matmul(x: jax.Array, w, bias: Optional[jax.Array] = None, *,
                             out_dtype=out_dtype)
 
 
-def conv2d(x: jax.Array, f, bias: Optional[jax.Array] = None, *,
+def conv2d(x: jax.Array, f, bias: jax.Array | None = None, *,
            stride: int = 1, pad: int = 0, act: str = "none",
-           pool: Optional[PoolSpec] = None,
+           pool: PoolSpec | None = None,
            name: str = "conv", out_dtype=None) -> jax.Array:
     """Deprecated shim: ``current().conv2d(...)``."""
     return current().conv2d(x, f, bias, stride=stride, pad=pad, act=act,

@@ -40,7 +40,7 @@ dominates, so the Fig. 12e ~51% saving tracks the traffic reduction.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Iterable, List, Optional
+from collections.abc import Iterable
 
 from repro.core.accelerator import ENERGY_PJ, MPNA_PAPER, MPNAConfig, \
     SystolicArray, TPU_V5E, TPUChip
@@ -244,10 +244,10 @@ def pipeline_makespan(net: str, batch: int = 1, waves: int = 8, *,
 
 
 def pipeline_stage_seconds(net: str, batch: int = 1, *,
-                           in_res: Optional[int] = None, in_ch: int = 3,
-                           bytes_in: int = 4, bytes_w: Optional[int] = None,
+                           in_res: int | None = None, in_ch: int = 3,
+                           bytes_in: int = 4, bytes_w: int | None = None,
                            chip: TPUChip = TPU_V5E,
-                           vmem_budget: Optional[int] = None
+                           vmem_budget: int | None = None
                            ) -> tuple[float, float]:
     """(conv stage seconds, fc stage seconds) for one micro-batch wave on
     the TPU roofline — each stage bounded by max(compute, memory) over
@@ -300,10 +300,10 @@ class WaveCost:
 _WAVE_COST_CACHE: dict = {}
 
 
-def zoo_wave_cost(net: str, batch: int, *, bytes_w: Optional[int] = None,
-                  in_res: Optional[int] = None, in_ch: int = 3,
+def zoo_wave_cost(net: str, batch: int, *, bytes_w: int | None = None,
+                  in_res: int | None = None, in_ch: int = 3,
                   chip: TPUChip = TPU_V5E,
-                  vmem_budget: Optional[int] = None) -> WaveCost:
+                  vmem_budget: int | None = None) -> WaveCost:
     """Price one serving wave of ``batch`` samples for the zoo scheduler:
     :func:`pipeline_stage_seconds` split into the (conv, fc) stage terms,
     memoized (the scheduler re-prices every candidate model at every
@@ -327,11 +327,11 @@ def zoo_wave_cost(net: str, batch: int, *, bytes_w: Optional[int] = None,
 
 
 def tpu_pipeline_crossover_batch(net: str, *,
-                                 in_res: Optional[int] = None,
+                                 in_res: int | None = None,
                                  in_ch: int = 3, bytes_in: int = 4,
-                                 bytes_w: Optional[int] = None,
+                                 bytes_w: int | None = None,
                                  chip: TPUChip = TPU_V5E,
-                                 vmem_budget: Optional[int] = None,
+                                 vmem_budget: int | None = None,
                                  max_batch: int = 4096) -> int:
     """Smallest micro-batch at which the conv stage overtakes the FC
     stage as the pipeline bottleneck on the TPU roofline — a plannable,
@@ -573,7 +573,7 @@ class ConvLayerTraffic:
     compulsory_bytes: int          # every NHWC/HWIO byte exactly once (the
     #                                fused op's pooled output when fused)
     im2col_bytes: int              # what the materialized-patch path moved
-    pool: Optional[PoolSpec] = None   # the maxpool stage following this conv
+    pool: PoolSpec | None = None   # the maxpool stage following this conv
     unfused_bytes: int = 0         # unfused conv plan + standalone-pool OFM
     #                                roundtrip (== plan.hbm_bytes, no pool)
 
@@ -585,13 +585,13 @@ class ConvLayerTraffic:
 
 
 def pallas_conv_traffic(net: str, *, batch: int = 1,
-                        in_res: Optional[int] = None, in_ch: int = 3,
-                        bytes_in: int = 4, bytes_w: Optional[int] = None,
+                        in_res: int | None = None, in_ch: int = 3,
+                        bytes_in: int = 4, bytes_w: int | None = None,
                         bytes_out: int = 4,
                         chip: TPUChip = TPU_V5E,
-                        vmem_budget: Optional[int] = None,
+                        vmem_budget: int | None = None,
                         fuse_pool: bool = True
-                        ) -> List[ConvLayerTraffic]:
+                        ) -> list[ConvLayerTraffic]:
     """Per-CONV-layer analytic HBM traffic of the implicit-GEMM path:
     planner bytes vs. the compulsory minimum vs. the im2col blowup the
     kernel deleted.  Layer geometry comes from
@@ -615,7 +615,7 @@ def pallas_conv_traffic(net: str, *, batch: int = 1,
              else None
              for i, s in enumerate(spec) if s.kind == "conv"]
     conv_specs = [s for s in spec if s.kind == "conv"]
-    out: List[ConvLayerTraffic] = []
+    out: list[ConvLayerTraffic] = []
     for l, s, ps in zip(convs, conv_specs, pools):
         res, _, ch = l.ifm
         hp = res + 2 * s.pad                        # padded input edge
@@ -674,12 +674,12 @@ class FCLayerTraffic:
 
 
 def pallas_fc_traffic(net: str, *, batch: int = 1,
-                      in_res: Optional[int] = None, in_ch: int = 3,
-                      bytes_in: int = 4, bytes_w: Optional[int] = None,
+                      in_res: int | None = None, in_ch: int = 3,
+                      bytes_in: int = 4, bytes_w: int | None = None,
                       bytes_out: int = 4,
                       chip: TPUChip = TPU_V5E,
-                      vmem_budget: Optional[int] = None
-                      ) -> List[FCLayerTraffic]:
+                      vmem_budget: int | None = None
+                      ) -> list[FCLayerTraffic]:
     """Per-FC-layer analytic HBM traffic of the batch-amortized SA-FC path
     for a CNN's classifier head at serving batch ``batch``: planner bytes
     (weight stream charged once per resident batch tile) vs. the
@@ -687,7 +687,7 @@ def pallas_fc_traffic(net: str, *, batch: int = 1,
     :func:`repro.models.cnn.network_stats` — the same single source of
     truth :func:`pallas_conv_traffic` reads."""
     bw = bytes_w if bytes_w is not None else bytes_in
-    out: List[FCLayerTraffic] = []
+    out: list[FCLayerTraffic] = []
     for l in network_stats(net, in_res=in_res, in_ch=in_ch):
         if l.kind != "fc":
             continue

@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
 
 from repro.core.accelerator import TPU_V5E, TPUChip
 
@@ -89,9 +88,9 @@ class _Comp:
     lines: list = dataclasses.field(default_factory=list)
 
 
-def _parse_computations(text: str) -> Dict[str, _Comp]:
-    comps: Dict[str, _Comp] = {}
-    cur: Optional[_Comp] = None
+def _parse_computations(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
     for line in text.splitlines():
         m = _COMP_HDR_RE.match(line)
         if m and line.rstrip().endswith("{"):
@@ -118,7 +117,7 @@ class HloCost:
     flops: float = 0.0                       # MXU dot flops, per chip
     hbm_bytes: float = 0.0                   # post-fusion op-level, per chip
     wire_bytes: float = 0.0                  # per chip, ring-factored
-    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+    collectives: dict[str, dict[str, float]] = dataclasses.field(
         default_factory=dict)
     unknown_trip_whiles: int = 0
 
@@ -163,8 +162,8 @@ def _is_bf16_emulation(cname, args, instrs, tables, body_pure_convert,
 def analyze_hlo(text: str) -> HloCost:
     comps = _parse_computations(text)
     # instruction symbol tables (name -> shape string) per computation
-    tables: Dict[str, Dict[str, str]] = {}
-    instrs: Dict[str, list] = {}
+    tables: dict[str, dict[str, str]] = {}
+    instrs: dict[str, list] = {}
     for cname, comp in comps.items():
         tab, ins = {}, []
         for line in comp.lines:
@@ -182,9 +181,9 @@ def analyze_hlo(text: str) -> HloCost:
     # fusion bodies: does the computation slice / update in place?  (the
     # call-site line often carries unrelated metadata, e.g. the squeeze
     # that follows a scan xs dynamic-slice)
-    body_has_ds: Dict[str, bool] = {}
-    body_has_dus: Dict[str, bool] = {}
-    body_pure_convert: Dict[str, bool] = {}
+    body_has_ds: dict[str, bool] = {}
+    body_has_dus: dict[str, bool] = {}
+    body_pure_convert: dict[str, bool] = {}
     _CONVERT_ONLY = {"convert", "bitcast", "parameter", "constant",
                      "get-tuple-element"}
     for cname, ins in instrs.items():
@@ -200,7 +199,7 @@ def analyze_hlo(text: str) -> HloCost:
             op_ in _CONVERT_ONLY for _, _, op_, _, _ in ins)
 
     # --- while-loop multipliers (fixpoint over nesting) -------------------
-    mult: Dict[str, float] = {c.name: 1.0 for c in comps.values() if c.entry}
+    mult: dict[str, float] = {c.name: 1.0 for c in comps.values() if c.entry}
     edges = []                                 # (parent, body, cond, trip)
     for cname, ins in instrs.items():
         for name, shape, op, args, line in ins:
@@ -235,7 +234,7 @@ def analyze_hlo(text: str) -> HloCost:
 
     # fusion-called computations inherit the caller's multiplier (for the
     # rare dot living inside a fusion body; bytes stay at the call site)
-    fusion_mult: Dict[str, float] = {}
+    fusion_mult: dict[str, float] = {}
     for cname, m_ in counted.items():
         for _, _, op, args, line in instrs.get(cname, []):
             mc = _CALLS_RE.search(line)
@@ -343,7 +342,7 @@ def analyze_hlo(text: str) -> HloCost:
     return cost
 
 
-def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+def collective_stats(hlo_text: str) -> dict[str, dict[str, float]]:
     return analyze_hlo(hlo_text).collectives
 
 
@@ -351,8 +350,8 @@ def top_cost_lines(text: str, k: int = 20, by: str = "bytes") -> list:
     """The dry-run 'profile': largest per-chip contributors (trip-count
     weighted), with the jax op_name metadata that names the culprit."""
     comps = _parse_computations(text)
-    tables: Dict[str, Dict[str, str]] = {}
-    instrs: Dict[str, list] = {}
+    tables: dict[str, dict[str, str]] = {}
+    instrs: dict[str, list] = {}
     for cname, comp in comps.items():
         tab, ins = {}, []
         for line in comp.lines:
@@ -364,7 +363,7 @@ def top_cost_lines(text: str, k: int = 20, by: str = "bytes") -> list:
         tables[cname] = tab
         instrs[cname] = ins
     # reuse multiplier logic via analyze on the fly
-    mult: Dict[str, float] = {c.name: 1.0 for c in comps.values() if c.entry}
+    mult: dict[str, float] = {c.name: 1.0 for c in comps.values() if c.entry}
     edges = []
     for cname, ins in instrs.items():
         for name, shape, op, args, line in ins:
@@ -475,7 +474,7 @@ def terms_from_schedule(schedule, chips: int = 1,
                          model_flops=model_flops)
 
 
-def fused_pool_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
+def fused_pool_traffic_from_schedule(schedule) -> dict[str, dict[str, float]]:
     """Per-conv-entry fused-vs-unfused HBM accounting from a compiled
     schedule: for every conv entry that committed a fused-pool flush
     epilogue, the bytes the schedule moves vs. what the unfused
@@ -487,7 +486,7 @@ def fused_pool_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
     from repro.core.dataflow import (PoolSpec, plan_conv,
                                      pool_roundtrip_bytes)
 
-    out: Dict[str, Dict[str, float]] = {}
+    out: dict[str, dict[str, float]] = {}
     policy = schedule.policy
     for key, plan in getattr(schedule, "conv_entries", {}).items():
         bytes_in = _np.dtype(key.dtype).itemsize
@@ -512,7 +511,7 @@ def fused_pool_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
 
 def pipeline_overlap_from_schedule(conv_schedule, fc_schedule, *,
                                    waves: int = 1,
-                                   chip: TPUChip = TPU_V5E) -> Dict:
+                                   chip: TPUChip = TPU_V5E) -> dict:
     """Dual-array pipeline overlap report from the two compiled stage
     schedules (:meth:`repro.core.schedule.LayerSchedule.compile_cnn_stages`):
     per-stage roofline-bounded seconds (max of compute and HBM terms over
@@ -547,7 +546,7 @@ def pipeline_overlap_from_schedule(conv_schedule, fc_schedule, *,
     }
 
 
-def fc_batch_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
+def fc_batch_traffic_from_schedule(schedule) -> dict[str, dict[str, float]]:
     """Per-FC-entry batch-amortization accounting from a compiled schedule:
     for every matmul entry the policy routed to the batch-amortized SA-FC
     dataflow (an :class:`~repro.core.dataflow.FCPlan`), the planner's
@@ -558,7 +557,7 @@ def fc_batch_traffic_from_schedule(schedule) -> Dict[str, Dict[str, float]]:
     ``BENCH_fc_batch.json`` headline curve."""
     import numpy as _np
 
-    out: Dict[str, Dict[str, float]] = {}
+    out: dict[str, dict[str, float]] = {}
     for key, plan in schedule.items():
         if not hasattr(plan, "bb"):          # MatmulPlan (sa_conv) entry
             continue

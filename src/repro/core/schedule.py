@@ -25,7 +25,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 from types import MappingProxyType
-from typing import Any, Dict, Iterator, Mapping, Optional, Tuple
+from collections.abc import Iterator, Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -89,8 +90,8 @@ class LayerSchedule(Mapping):
     :attr:`conv_entries` / :meth:`plans`."""
 
     def __init__(self, phase: str, policy: DispatchPolicy,
-                 entries: Dict[OpKey, MatmulPlan],
-                 conv_entries: Optional[Dict[ConvOpKey, ConvPlan]] = None
+                 entries: dict[OpKey, MatmulPlan],
+                 conv_entries: dict[ConvOpKey, ConvPlan] | None = None
                  ) -> None:
         self.phase = phase
         self.policy = policy
@@ -127,13 +128,13 @@ class LayerSchedule(Mapping):
 
     # -- lookup -------------------------------------------------------------
     def lookup(self, name: str, m: int, n: int, k: int,
-               dtype: str, weight_dtype: str) -> Optional[MatmulPlan]:
+               dtype: str, weight_dtype: str) -> MatmulPlan | None:
         return self._entries.get(OpKey(name, m, n, k, dtype, weight_dtype))
 
     def lookup_conv(self, name: str, batch: int, h: int, w: int, ci: int,
                     p: int, q: int, co: int, stride: int,
                     dtype: str, weight_dtype: str, *,
-                    pool=None) -> Optional[ConvPlan]:
+                    pool=None) -> ConvPlan | None:
         return self._conv_entries.get(
             ConvOpKey(name, batch, h, w, ci, p, q, co, stride,
                       dtype, weight_dtype,
@@ -186,10 +187,10 @@ class LayerSchedule(Mapping):
     @classmethod
     def compile(cls, cfg, phase: str, *,
                 batch: int = 1, seq: int = 128,
-                max_seq: Optional[int] = None,
+                max_seq: int | None = None,
                 cache_dtype=jnp.bfloat16,
-                policy: Optional[DispatchPolicy] = None,
-                params: Optional[Any] = None) -> "LayerSchedule":
+                policy: DispatchPolicy | None = None,
+                params: Any | None = None) -> LayerSchedule:
         """Compile (and memoize) the schedule for ``cfg`` in ``phase``.
 
         ``phase``: ``train`` (loss over a (batch, seq) token block —
@@ -218,13 +219,13 @@ class LayerSchedule(Mapping):
     @classmethod
     def compile_cnn(cls, net: str, *,
                     batch: int = 1,
-                    in_res: Optional[int] = None,
+                    in_res: int | None = None,
                     in_ch: int = 3,
                     width_mult: float = 1.0,
                     dtype=jnp.float32,
-                    policy: Optional[DispatchPolicy] = None,
-                    params: Optional[Any] = None,
-                    stage: str = "full") -> "LayerSchedule":
+                    policy: DispatchPolicy | None = None,
+                    params: Any | None = None,
+                    stage: str = "full") -> LayerSchedule:
         """Compile (and memoize) the inference schedule for a CNN from
         :data:`repro.models.cnn.NETWORKS` — the paper's per-layer offline
         schedule (Sec. V) for its own workloads: every CONV gets a
@@ -265,7 +266,7 @@ class LayerSchedule(Mapping):
 
     @classmethod
     def compile_cnn_stages(cls, net: str, **kw: Any
-                           ) -> Tuple["LayerSchedule", "LayerSchedule"]:
+                           ) -> tuple[LayerSchedule, LayerSchedule]:
         """(conv-stage schedule, fc-stage schedule) for the dual-array
         serving pipeline — same arguments as :meth:`compile_cnn`."""
         return (cls.compile_cnn(net, stage="conv", **kw),
@@ -284,37 +285,82 @@ class ScheduleRegistry:
     :meth:`LayerSchedule.compile_cnn_stages`) and files the
     (conv-stage, fc-stage) schedule pair under its key; ``dtype_tag``
     names the weight format of the variant (``"float32"`` / ``"int8"``),
-    so the fp32 and int8 AlexNet variants coexist as distinct entries."""
+    so the fp32 and int8 AlexNet variants coexist as distinct entries.
 
-    def __init__(self) -> None:
-        self._stages: Dict[Tuple[str, str, int],
-                           Tuple[LayerSchedule, LayerSchedule]] = {}
+    Re-registering a key with the *same* compile settings is idempotent
+    (returns the filed pair); re-registering it with *different*
+    settings raises — two tenants silently sharing one registry slot
+    while meaning different schedules is exactly the bug an inspectable
+    registry exists to prevent.
+
+    ``verify=True`` statically verifies each newly compiled pair with
+    :func:`repro.analysis.verify_schedule` before filing it (raising
+    :class:`repro.analysis.ScheduleVerificationError` on a violation) —
+    the compile-time debug hook of the static-analysis subsystem."""
+
+    def __init__(self, *, verify: bool = False) -> None:
+        self._stages: dict[tuple[str, str, int],
+                           tuple[LayerSchedule, LayerSchedule]] = {}
+        self._settings: dict[tuple[str, str, int], tuple] = {}
+        self._verify = verify
+
+    @staticmethod
+    def _settings_fingerprint(compile_kw: dict[str, Any]) -> tuple:
+        """Normalized identity of one register call's compile settings:
+        params collapse to their shape/dtype fingerprint, dtypes to
+        their canonical names, so an identical re-register compares
+        equal however the caller spelled it."""
+        items = []
+        for name in sorted(compile_kw):
+            value = compile_kw[name]
+            if name == "params":
+                value = _params_fingerprint(value)
+            elif name == "dtype" and value is not None:
+                value = str(jnp.dtype(value))
+            items.append((name, value))
+        return tuple(items)
 
     def register(self, net: str, *, dtype_tag: str = "float32",
                  batch: int = 1, **compile_kw: Any
-                 ) -> Tuple[LayerSchedule, LayerSchedule]:
+                 ) -> tuple[LayerSchedule, LayerSchedule]:
         """Compile and file the stage-schedule pair for one
-        ``(net, dtype_tag, batch)`` variant; idempotent (re-registering a
-        key returns the filed pair)."""
+        ``(net, dtype_tag, batch)`` variant.  Idempotent for an
+        identical re-register; a re-register with different compile
+        settings raises ``ValueError`` instead of silently overwriting
+        (or silently answering with) the other tenant's schedules."""
         key = (net, dtype_tag, batch)
+        fingerprint = self._settings_fingerprint(compile_kw)
         hit = self._stages.get(key)
-        if hit is None:
-            hit = self._stages[key] = LayerSchedule.compile_cnn_stages(
-                net, batch=batch, **compile_kw)
-        return hit
+        if hit is not None:
+            if fingerprint != self._settings[key]:
+                raise ValueError(
+                    f"conflicting re-registration of {key}: already "
+                    f"compiled with {self._settings[key]!r}, "
+                    f"re-requested with {fingerprint!r}")
+            return hit
+        pair = LayerSchedule.compile_cnn_stages(net, batch=batch,
+                                                **compile_kw)
+        if self._verify:
+            from repro.analysis import verify_stage_pair
+            verify_stage_pair(
+                pair, label=f"{key[0]}/{key[1]}@b{key[2]}"
+            ).raise_if_failed()
+        self._stages[key] = pair
+        self._settings[key] = fingerprint
+        return pair
 
     def stages(self, net: str, dtype_tag: str, batch: int
-               ) -> Tuple[LayerSchedule, LayerSchedule]:
+               ) -> tuple[LayerSchedule, LayerSchedule]:
         key = (net, dtype_tag, batch)
         if key not in self._stages:
             raise KeyError(f"no compiled schedule for {key}; "
                            f"registered: {sorted(self._stages)}")
         return self._stages[key]
 
-    def keys(self) -> Tuple[Tuple[str, str, int], ...]:
+    def keys(self) -> tuple[tuple[str, str, int], ...]:
         return tuple(sorted(self._stages))
 
-    def __contains__(self, key: Tuple[str, str, int]) -> bool:
+    def __contains__(self, key: tuple[str, str, int]) -> bool:
         return key in self._stages
 
     def __len__(self) -> int:
@@ -324,7 +370,7 @@ class ScheduleRegistry:
         return f"ScheduleRegistry({list(self.keys())!r})"
 
 
-_CACHE: Dict[Tuple, LayerSchedule] = {}
+_CACHE: dict[tuple, LayerSchedule] = {}
 
 
 def clear_schedule_cache() -> None:
@@ -332,7 +378,7 @@ def clear_schedule_cache() -> None:
     _CACHE.clear()
 
 
-def _params_fingerprint(params: Any) -> Optional[Tuple]:
+def _params_fingerprint(params: Any) -> tuple | None:
     if params is None:
         return None
     flat, treedef = jax.tree_util.tree_flatten(params)
@@ -340,10 +386,10 @@ def _params_fingerprint(params: Any) -> Optional[Tuple]:
             tuple((tuple(leaf.shape), str(leaf.dtype)) for leaf in flat))
 
 
-def _entries_from_trace(tr) -> Tuple[Dict[OpKey, MatmulPlan],
-                                     Dict[ConvOpKey, ConvPlan]]:
-    entries: Dict[OpKey, MatmulPlan] = {}
-    conv_entries: Dict[ConvOpKey, ConvPlan] = {}
+def _entries_from_trace(tr) -> tuple[dict[OpKey, MatmulPlan],
+                                     dict[ConvOpKey, ConvPlan]]:
+    entries: dict[OpKey, MatmulPlan] = {}
+    conv_entries: dict[ConvOpKey, ConvPlan] = {}
     for rec in tr:
         if rec.conv_plan is not None and rec.conv_shape is not None:
             pool = getattr(rec, "pool", None)
@@ -360,11 +406,11 @@ def _entries_from_trace(tr) -> Tuple[Dict[OpKey, MatmulPlan],
     return entries, conv_entries
 
 
-def _collect_cnn(net: str, batch: int, in_res: Optional[int], in_ch: int,
+def _collect_cnn(net: str, batch: int, in_res: int | None, in_ch: int,
                  width_mult: float, dtype, policy: DispatchPolicy, params,
                  stage: str = "full"
-                 ) -> Tuple[Dict[OpKey, MatmulPlan],
-                            Dict[ConvOpKey, ConvPlan]]:
+                 ) -> tuple[dict[OpKey, MatmulPlan],
+                            dict[ConvOpKey, ConvPlan]]:
     """Abstract-trace one CNN forward (or one pipeline stage) under a
     collecting engine.  The ``"fc"`` stage traces the classifier head on
     the conv stage's hand-off shape (the flattened features), derived by
@@ -394,10 +440,10 @@ def _collect_cnn(net: str, batch: int, in_res: Optional[int], in_ch: int,
 
 
 def _collect(cfg, phase: str, batch: int, seq: int,
-             max_seq: Optional[int], cache_dtype,
+             max_seq: int | None, cache_dtype,
              policy: DispatchPolicy, params
-             ) -> Tuple[Dict[OpKey, MatmulPlan],
-                        Dict[ConvOpKey, ConvPlan]]:
+             ) -> tuple[dict[OpKey, MatmulPlan],
+                        dict[ConvOpKey, ConvPlan]]:
     """Abstract-trace the phase function under a collecting engine."""
     # lazy imports: models/serve import repro.core.engine at module load
     from repro.models import transformer as T

@@ -9,7 +9,7 @@ per-sequence structure so the model has signal to fit in the examples.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from collections.abc import Iterator
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +35,7 @@ def _zipf_logits(vocab: int) -> np.ndarray:
 class SyntheticLM:
     """batch_at(step) -> {'tokens': (local_batch, seq)} deterministic."""
 
-    def __init__(self, dc: DataConfig, cfg: Optional[ModelConfig] = None):
+    def __init__(self, dc: DataConfig, cfg: ModelConfig | None = None):
         assert dc.global_batch % dc.n_shards == 0
         self.dc = dc
         self.cfg = cfg

@@ -11,7 +11,6 @@ logical scale) in tests/test_elastic.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,12 +22,12 @@ class MeshPlan:
     wasted_chips: int
 
     @property
-    def shape(self) -> Tuple[int, ...]:
+    def shape(self) -> tuple[int, ...]:
         return (self.pods, self.data, self.model) if self.pods > 1 \
             else (self.data, self.model)
 
     @property
-    def axis_names(self) -> Tuple[str, ...]:
+    def axis_names(self) -> tuple[str, ...]:
         return ("pod", "data", "model") if self.pods > 1 \
             else ("data", "model")
 
@@ -53,8 +52,8 @@ def replan(surviving_chips: int, *, model_parallel: int = 16,
                     surviving_chips - used)
 
 
-def degrade_sequence(start_chips: int, failures: List[int],
-                     **kw) -> List[MeshPlan]:
+def degrade_sequence(start_chips: int, failures: list[int],
+                     **kw) -> list[MeshPlan]:
     """Plans after each failure event (failures = chips lost per event)."""
     plans = []
     chips = start_chips

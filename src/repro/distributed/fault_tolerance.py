@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
 
 
 class StepMonitor:
@@ -23,7 +22,7 @@ class StepMonitor:
         self.factor = factor
         self.warmup = warmup
         self.window = window
-        self._times: List[float] = []
+        self._times: list[float] = []
 
     def median(self) -> float:
         if not self._times:
@@ -51,22 +50,22 @@ class HeartbeatTracker:
     """Deadline-based liveness: a node missing ``timeout`` seconds of
     heartbeats is declared failed; the surviving set feeds elastic remesh."""
 
-    def __init__(self, nodes: List[str], timeout: float = 60.0):
+    def __init__(self, nodes: list[str], timeout: float = 60.0):
         now = time.monotonic()
         self.timeout = timeout
-        self._beats: Dict[str, Heartbeat] = {
+        self._beats: dict[str, Heartbeat] = {
             n: Heartbeat(n, now) for n in nodes}
 
-    def beat(self, node: str, now: Optional[float] = None) -> None:
+    def beat(self, node: str, now: float | None = None) -> None:
         self._beats[node].last_seen = now if now is not None \
             else time.monotonic()
 
-    def failed(self, now: Optional[float] = None) -> List[str]:
+    def failed(self, now: float | None = None) -> list[str]:
         now = now if now is not None else time.monotonic()
         return [n for n, hb in self._beats.items()
                 if now - hb.last_seen > self.timeout]
 
-    def survivors(self, now: Optional[float] = None) -> List[str]:
+    def survivors(self, now: float | None = None) -> list[str]:
         dead = set(self.failed(now))
         return [n for n in self._beats if n not in dead]
 
@@ -76,12 +75,12 @@ class StepDeadline:
 
     def __init__(self, deadline_s: float):
         self.deadline_s = deadline_s
-        self._start: Optional[float] = None
+        self._start: float | None = None
 
     def begin(self) -> None:
         self._start = time.monotonic()
 
-    def expired(self, now: Optional[float] = None) -> bool:
+    def expired(self, now: float | None = None) -> bool:
         if self._start is None:
             return False
         now = now if now is not None else time.monotonic()

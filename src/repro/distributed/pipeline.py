@@ -11,7 +11,7 @@ passed to the train launcher).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Tuple
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +28,7 @@ class PipeSchedule:
         s, m = self.stages, self.microbatches
         return (s - 1) / (m + s - 1)
 
-    def slots(self) -> List[List[Tuple[int, int]]]:
+    def slots(self) -> list[list[tuple[int, int]]]:
         """Time-major schedule: slots()[t] = [(stage, microbatch), ...]."""
         s, m = self.stages, self.microbatches
         out = []
@@ -42,7 +42,7 @@ class PipeSchedule:
         return out
 
 
-def pipelined_forward(stage_fns: List[Callable], x_mb: jax.Array,
+def pipelined_forward(stage_fns: list[Callable], x_mb: jax.Array,
                       axis_name: str = "pod"):
     """Inside shard_map over `axis_name`: each pod applies its stage and
     permutes activations forward.  x_mb: (microbatches, mb_size, ...) local

@@ -25,7 +25,7 @@ from __future__ import annotations
 
 import contextlib
 import threading
-from typing import Any, Optional, Tuple
+from typing import Any
 
 import jax
 from jax.sharding import Mesh, NamedSharding
@@ -34,7 +34,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 
 
-def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 
 
@@ -59,8 +59,8 @@ def _fsdp(mesh: Mesh, dim: int, spec: list, shape) -> None:
 # ---------------------------------------------------------------------------
 # parameters
 # ---------------------------------------------------------------------------
-def _param_spec(cfg: ModelConfig, mesh: Mesh, path: Tuple[str, ...],
-                shape: Tuple[int, ...]) -> P:
+def _param_spec(cfg: ModelConfig, mesh: Mesh, path: tuple[str, ...],
+                shape: tuple[int, ...]) -> P:
     tp = tp_size(mesh)
     names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
     leaf = names[-1]
@@ -247,7 +247,7 @@ _MESH_CTX = threading.local()
 
 
 @contextlib.contextmanager
-def activation_mesh(mesh: Optional[Mesh]):
+def activation_mesh(mesh: Mesh | None):
     prev = getattr(_MESH_CTX, "mesh", None)
     _MESH_CTX.mesh = mesh
     try:
@@ -256,11 +256,11 @@ def activation_mesh(mesh: Optional[Mesh]):
         _MESH_CTX.mesh = prev
 
 
-def active_mesh() -> Optional[Mesh]:
+def active_mesh() -> Mesh | None:
     return getattr(_MESH_CTX, "mesh", None)
 
 
-def constrain(x: jax.Array, spec: Tuple[Optional[str], ...]) -> jax.Array:
+def constrain(x: jax.Array, spec: tuple[str | None, ...]) -> jax.Array:
     """spec entries: 'dp' | 'tp' | None, one per dim (len must match)."""
     mesh = active_mesh()
     if mesh is None:

@@ -22,7 +22,6 @@ This module keeps two things:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -31,7 +30,7 @@ from repro.kernels.sa_conv import sa_conv_matmul
 
 
 def conv2d_mpna(x: jax.Array, f: jax.Array,
-                bias: Optional[jax.Array] = None, *,
+                bias: jax.Array | None = None, *,
                 stride: int = 1, act: str = "none",
                 interpret: bool = True) -> jax.Array:
     """Deprecated shim: ``current().conv2d(...)`` on the pallas backend.
@@ -47,7 +46,7 @@ def conv2d_mpna(x: jax.Array, f: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=("stride", "act", "interpret"))
 def conv2d_im2col(x: jax.Array, f: jax.Array,
-                  bias: Optional[jax.Array] = None, *,
+                  bias: jax.Array | None = None, *,
                   stride: int = 1, act: str = "none",
                   interpret: bool = True) -> jax.Array:
     """Legacy materialized-im2col CONV — benchmark reference only.

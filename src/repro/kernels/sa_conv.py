@@ -24,7 +24,6 @@ never spills — the output-stationary schedule the paper uses for CONV.
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +32,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dataflow import MatmulPlan, plan_matmul
 from repro.kernels import ref
+from repro.kernels.geometry import matmul_geometry
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 
@@ -76,10 +76,10 @@ def _pad_to(x: jax.Array, rows: int, cols: int) -> jax.Array:
 @functools.partial(jax.jit, static_argnames=("act", "plan", "out_dtype",
                                              "interpret"))
 def sa_conv_matmul(x: jax.Array, w: jax.Array,
-                   bias: Optional[jax.Array] = None, *,
+                   bias: jax.Array | None = None, *,
                    act: str = "none",
-                   plan: Optional[MatmulPlan] = None,
-                   w_scale: Optional[jax.Array] = None,
+                   plan: MatmulPlan | None = None,
+                   w_scale: jax.Array | None = None,
                    out_dtype=None,
                    interpret: bool = True) -> jax.Array:
     """(m,k) @ (k,n) [+ scale, bias, act] through the SA-CONV dataflow.
@@ -100,38 +100,34 @@ def sa_conv_matmul(x: jax.Array, w: jax.Array,
     # The planner caps tiles at dataflow.MAX_TILE, so the executed tiling
     # IS the planned tiling — plan.hbm_bytes/vmem_bytes describe this run.
     bm, bn, bk = plan.bm, plan.bn, plan.bk
-
-    gm, gn, gk = pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk)
-    xp = _pad_to(x, gm * bm, gk * bk)
-    wp = _pad_to(w, gk * bk, gn * bn)
     has_bias = bias is not None
     has_scale = w_scale is not None
 
-    in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-    ]
+    # Single source of launch-shape truth, shared with the static
+    # verifier (repro.analysis): the pallas_call transcribes it.
+    geom = matmul_geometry(m, n, k, bm=bm, bn=bn, bk=bk,
+                           has_scale=has_scale, has_bias=has_bias)
+    gm, gn, gk = geom.grid
+    xp = _pad_to(x, gm * bm, gk * bk)
+    wp = _pad_to(w, gk * bk, gn * bn)
+
     args = [xp, wp]
     if has_scale:
-        sp = jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
-                     ((0, 0), (0, gn * bn - n)))
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        args.append(sp)
+        args.append(jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
+                            ((0, 0), (0, gn * bn - n))))
     if has_bias:
-        bp = jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn)
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        args.append(bp)
+        args.append(jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn))
 
     out = pl.pallas_call(
         functools.partial(_sa_conv_kernel, act=act, has_bias=has_bias,
                           has_scale=has_scale),
-        grid=(gm, gn, gk),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gm * bm, gn * bn), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        grid=geom.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in geom.inputs],
+        out_specs=pl.BlockSpec(geom.out.block, geom.out.index_map),
+        out_shape=jax.ShapeDtypeStruct(geom.out_shape, out_dtype),
+        scratch_shapes=[pltpu.VMEM(s, jnp.float32) for s in geom.scratch],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=geom.dimension_semantics),
         interpret=interpret,
     )(*args)
     return out[:m, :n]

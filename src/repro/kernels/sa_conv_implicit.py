@@ -30,7 +30,6 @@ tiles (no clamping between plan and execution).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +38,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dataflow import ConvPlan, plan_conv
 from repro.kernels import ref
+from repro.kernels.geometry import conv_geometry
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
 
 
@@ -127,10 +127,10 @@ def _implicit_conv_kernel(x_ref, f_ref, *rest, stride: int, oh: int, ow: int,
 @functools.partial(jax.jit, static_argnames=("stride", "act", "plan",
                                              "out_dtype", "interpret"))
 def sa_conv_implicit(x: jax.Array, f: jax.Array,
-                     bias: Optional[jax.Array] = None, *,
+                     bias: jax.Array | None = None, *,
                      stride: int = 1, act: str = "none",
-                     plan: Optional[ConvPlan] = None,
-                     w_scale: Optional[jax.Array] = None,
+                     plan: ConvPlan | None = None,
+                     w_scale: jax.Array | None = None,
                      out_dtype=None,
                      interpret: bool = True) -> jax.Array:
     """NHWC x HWIO VALID conv [+ scale, bias, act] — implicit-GEMM SA-CONV.
@@ -159,33 +159,26 @@ def sa_conv_implicit(x: jax.Array, f: jax.Array,
         plan = plan_conv(batch, h, w, ci, p, q, co, stride=stride,
                          bytes_in=x.dtype.itemsize,
                          bytes_w=f.dtype.itemsize)
-    ooh, oow = oh, ow                              # emitted block dims
-    if plan.fuse_pool:
-        ooh = (oh - plan.pool_window) // plan.pool_stride + 1
-        oow = (ow - plan.pool_window) // plan.pool_stride + 1
+    has_bias = bias is not None
+    has_scale = w_scale is not None
+
+    # Single source of launch-shape truth: the same geometry object the
+    # static verifier (repro.analysis) checks is what gets launched.
+    geom = conv_geometry(batch, h, w, ci, p, q, co, stride=stride,
+                         plan=plan, has_scale=has_scale, has_bias=has_bias)
+    _, gj, gi = geom.grid
     bi, bj = plan.bi, plan.bj
-    gi, gj = pl.cdiv(ci, bi), pl.cdiv(co, bj)
     xp = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, gi * bi - ci))) \
         if gi * bi != ci else x
     fp = jnp.pad(f, ((0, 0), (0, 0), (0, gi * bi - ci), (0, gj * bj - co))) \
         if (gi * bi != ci or gj * bj != co) else f
-    has_bias = bias is not None
-    has_scale = w_scale is not None
 
-    in_specs = [
-        pl.BlockSpec((1, h, w, bi), lambda n_, j, k_: (n_, 0, 0, k_)),
-        pl.BlockSpec((p, q, bi, bj), lambda n_, j, k_: (0, 0, k_, j)),
-    ]
     args = [xp, fp]
     if has_scale:
-        sp = jnp.pad(w_scale.reshape(1, co).astype(jnp.float32),
-                     ((0, 0), (0, gj * bj - co)))
-        in_specs.append(pl.BlockSpec((1, bj), lambda n_, j, k_: (0, j)))
-        args.append(sp)
+        args.append(jnp.pad(w_scale.reshape(1, co).astype(jnp.float32),
+                            ((0, 0), (0, gj * bj - co))))
     if has_bias:
-        bp = jnp.pad(bias, (0, gj * bj - co)).reshape(1, gj * bj)
-        in_specs.append(pl.BlockSpec((1, bj), lambda n_, j, k_: (0, j)))
-        args.append(bp)
+        args.append(jnp.pad(bias, (0, gj * bj - co)).reshape(1, gj * bj))
 
     out = pl.pallas_call(
         functools.partial(_implicit_conv_kernel, stride=stride, oh=oh, ow=ow,
@@ -194,14 +187,13 @@ def sa_conv_implicit(x: jax.Array, f: jax.Array,
                           pool_window=plan.pool_window if plan.fuse_pool
                           else 0,
                           pool_stride=plan.pool_stride),
-        grid=(batch, gj, gi),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, ooh, oow, bj),
-                               lambda n_, j, k_: (n_, 0, 0, j)),
-        out_shape=jax.ShapeDtypeStruct((batch, ooh, oow, gj * bj), out_dtype),
-        scratch_shapes=[pltpu.VMEM((oh * ow, bj), jnp.float32)],
+        grid=geom.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in geom.inputs],
+        out_specs=pl.BlockSpec(geom.out.block, geom.out.index_map),
+        out_shape=jax.ShapeDtypeStruct(geom.out_shape, out_dtype),
+        scratch_shapes=[pltpu.VMEM(s, jnp.float32) for s in geom.scratch],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=geom.dimension_semantics),
         interpret=interpret,
     )(*args)
     return out[..., :co]

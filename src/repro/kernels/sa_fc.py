@@ -45,7 +45,6 @@ from requesting them).
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -54,9 +53,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dataflow import fc_vmem_bytes
 from repro.kernels import ref
+from repro.kernels.geometry import SUBLANE, fc_geometry
 from repro.kernels.pallas_compat import CompilerParams as _CompilerParams
-
-SUBLANE = 16
 
 
 def _sa_fc_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool,
@@ -91,13 +89,13 @@ def _sa_fc_kernel(x_ref, w_ref, *rest, act: str, has_bias: bool,
                                              "out_dtype", "interpret",
                                              "vmem_limit"))
 def sa_fc_matmul(x: jax.Array, w: jax.Array,
-                 bias: Optional[jax.Array] = None, *,
+                 bias: jax.Array | None = None, *,
                  act: str = "none",
-                 bb: Optional[int] = None,
+                 bb: int | None = None,
                  bn: int = 512, bk: int = 512,
-                 w_scale: Optional[jax.Array] = None,
+                 w_scale: jax.Array | None = None,
                  out_dtype=None,
-                 vmem_limit: Optional[int] = None,
+                 vmem_limit: int | None = None,
                  interpret: bool = True) -> jax.Array:
     """(b,k) @ (k,n) — batch-amortized weight-streaming dataflow.
 
@@ -122,14 +120,17 @@ def sa_fc_matmul(x: jax.Array, w: jax.Array,
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     out_dtype = out_dtype or x.dtype
+    has_bias = bias is not None
+    has_scale = w_scale is not None
 
-    bp = max(SUBLANE, ((b + SUBLANE - 1) // SUBLANE) * SUBLANE)
-    if bb is None:
-        bb = bp                                  # whole batch resident
-    bb = max(SUBLANE, min(((bb + SUBLANE - 1) // SUBLANE) * SUBLANE, bp))
-    bn = min(bn, ((n + 127) // 128) * 128)
-    bk = min(bk, ((k + 127) // 128) * 128)
-    gb, gn, gk = pl.cdiv(bp, bb), pl.cdiv(n, bn), pl.cdiv(k, bk)
+    # The launch geometry (grid, block specs, index maps, scratch) is
+    # computed once, as data, and verified statically by repro.analysis —
+    # the pallas_call below is a straight transcription of it.
+    geom = fc_geometry(b, n, k, bb=bb, bn=bn, bk=bk,
+                       has_scale=has_scale, has_bias=has_bias)
+    gb, gn, gk = geom.grid
+    bb, bk = geom.input("x").block
+    bn = geom.input("w").block[1]
 
     if vmem_limit is not None:
         need = fc_vmem_bytes(bb, bn, bk, bytes_in=x.dtype.itemsize,
@@ -143,34 +144,24 @@ def sa_fc_matmul(x: jax.Array, w: jax.Array,
 
     xp = jnp.pad(x, ((0, gb * bb - b), (0, gk * bk - k)))
     wp = jnp.pad(w, ((0, gk * bk - k), (0, gn * bn - n)))
-    has_bias = bias is not None
-    has_scale = w_scale is not None
 
-    in_specs = [
-        pl.BlockSpec((bb, bk), lambda i, j, kk: (i, kk)),   # acts: batch tile
-        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),   # weights: streamed
-    ]
     args = [xp, wp]
     if has_scale:
-        sp = jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
-                     ((0, 0), (0, gn * bn - n)))
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        args.append(sp)
+        args.append(jnp.pad(w_scale.reshape(1, n).astype(jnp.float32),
+                            ((0, 0), (0, gn * bn - n))))
     if has_bias:
-        biasp = jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn)
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-        args.append(biasp)
+        args.append(jnp.pad(bias, (0, gn * bn - n)).reshape(1, gn * bn))
 
     out = pl.pallas_call(
         functools.partial(_sa_fc_kernel, act=act, has_bias=has_bias,
                           has_scale=has_scale),
-        grid=(gb, gn, gk),
-        in_specs=in_specs,
-        out_specs=pl.BlockSpec((bb, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((gb * bb, gn * bn), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bb, bn), jnp.float32)],
+        grid=geom.grid,
+        in_specs=[pl.BlockSpec(s.block, s.index_map) for s in geom.inputs],
+        out_specs=pl.BlockSpec(geom.out.block, geom.out.index_map),
+        out_shape=jax.ShapeDtypeStruct(geom.out_shape, out_dtype),
+        scratch_shapes=[pltpu.VMEM(s, jnp.float32) for s in geom.scratch],
         compiler_params=_CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+            dimension_semantics=geom.dimension_semantics),
         interpret=interpret,
     )(*args)
     return out[:b, :n]

@@ -20,7 +20,6 @@ import dataclasses
 import json
 import time
 import traceback
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,7 +50,7 @@ def audio_frames_for(shape: ShapeConfig) -> int:
     return max(128, shape.seq_len // 4)
 
 
-def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> str | None:
     if shape.name == "long_500k" and not cfg.sub_quadratic:
         return ("pure full-attention arch: 500k decode KV is unbounded "
                 "(assignment: skip, noted in DESIGN.md §6)")

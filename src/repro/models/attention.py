@@ -9,7 +9,6 @@ what bounds KV memory for the 500k-context cells (mixtral/gemma local
 layers: O(window), not O(S))."""
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,7 +98,7 @@ def _constrain_kv(cfg, k):
 
 
 def masked_attention(q, k, v, kv_mask, *, softcap: float = 0.0,
-                     scale: Optional[float] = None):
+                     scale: float | None = None):
     """Decode attention: q (b,1,hq,d) vs cache k/v (b,S,hkv,d) with an
     explicit per-slot validity mask (b? S) — position order is irrelevant
     once RoPE is burned into the cached keys."""
@@ -129,8 +128,8 @@ def masked_attention(q, k, v, kv_mask, *, softcap: float = 0.0,
 def attn_forward(cfg, p: dict, x: jax.Array, pos_ids: jax.Array, *,
                  window: int = 0, use_rope: bool = True,
                  causal: bool = True,
-                 x_kv: Optional[jax.Array] = None,
-                 softcap: Optional[float] = None,
+                 x_kv: jax.Array | None = None,
+                 softcap: float | None = None,
                  return_kv: bool = False):
     """Full-sequence (train / prefill) attention."""
     eng = engine.current()
@@ -160,8 +159,8 @@ def init_kv_cache(cfg, batch: int, max_seq: int, window: int,
 
 def attn_decode(cfg, p: dict, x: jax.Array, pos: jax.Array, cache: dict, *,
                 window: int = 0,
-                cross_kv: Optional[Tuple[jax.Array, jax.Array]] = None,
-                softcap: Optional[float] = None):
+                cross_kv: tuple[jax.Array, jax.Array] | None = None,
+                softcap: float | None = None):
     """One-token decode step.  x: (b,1,d); pos: scalar int32.
 
     Self-attention: project k/v for the new token, write into the (ring)

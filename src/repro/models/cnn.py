@@ -11,7 +11,7 @@ i.e. the complete MPNA operator set with the Fig. 7 pipeline intact.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Optional, Sequence, Tuple
+from collections.abc import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -33,7 +33,7 @@ class ConvSpec:
 
 # AlexNet (227x227x3 input, no grouping — matches Table I: 1.07B CONV MACs,
 # 58.6M FC MACs, 3.74M CONV weights, 58.6M FC weights)
-ALEXNET: Tuple[ConvSpec, ...] = (
+ALEXNET: tuple[ConvSpec, ...] = (
     ConvSpec("conv", 96, 11, 4, 0),
     ConvSpec("pool", kernel=3, stride=2),
     ConvSpec("conv", 256, 5, 1, 2),
@@ -58,7 +58,7 @@ def _vgg():
     return tuple(spec)
 
 
-VGG16: Tuple[ConvSpec, ...] = _vgg()
+VGG16: tuple[ConvSpec, ...] = _vgg()
 
 NETWORKS = {"alexnet": (ALEXNET, 227), "vgg16": (VGG16, 224)}
 
@@ -76,11 +76,11 @@ class LayerStats:
     weight_reuse: int          # uses of one weight = |OF| (conv) / 1 (fc)
     in_act_reuse: int          # uses of one input activation
     out_act_reuse: int         # partial sums per output activation
-    ifm: Tuple[int, int, int] = (0, 0, 0)    # H, W, C at the layer input
-    ofm: Tuple[int, int, int] = (0, 0, 0)
+    ifm: tuple[int, int, int] = (0, 0, 0)    # H, W, C at the layer input
+    ofm: tuple[int, int, int] = (0, 0, 0)
 
 
-def network_stats(name: str, *, in_res: Optional[int] = None,
+def network_stats(name: str, *, in_res: int | None = None,
                   in_ch: int = 3) -> list[LayerStats]:
     spec, res0 = NETWORKS[name]
     res, ch = in_res or res0, in_ch
@@ -119,8 +119,8 @@ def network_stats(name: str, *, in_res: Optional[int] = None,
 # is the batch-amortization target benchmarks/fc_batch.py measures and
 # serve/cnn_server.py batches for)
 # ---------------------------------------------------------------------------
-def fc_head(name: str, *, in_res: Optional[int] = None, in_ch: int = 3,
-            width_mult: float = 1.0) -> list[Tuple[int, int, str]]:
+def fc_head(name: str, *, in_res: int | None = None, in_ch: int = 3,
+            width_mult: float = 1.0) -> list[tuple[int, int, str]]:
     """(fan_in, fan_out, act) triples of the network's FC stack, geometry
     from :func:`network_stats` (single source of truth for the shape
     propagation).  ``width_mult`` scales every dimension uniformly (min 8)
@@ -138,7 +138,7 @@ def fc_head(name: str, *, in_res: Optional[int] = None, in_ch: int = 3,
             for l, s in zip(stats, fcs)]
 
 
-def init_fc_head(head: Sequence[Tuple[int, int, str]], key, *,
+def init_fc_head(head: Sequence[tuple[int, int, str]], key, *,
                  dtype=jnp.float32) -> list:
     params = []
     for fan_in, fan_out, _ in head:
@@ -148,9 +148,9 @@ def init_fc_head(head: Sequence[Tuple[int, int, str]], key, *,
     return params
 
 
-def fc_head_forward(head: Sequence[Tuple[int, int, str]], params: list,
+def fc_head_forward(head: Sequence[tuple[int, int, str]], params: list,
                     x2d: jax.Array, *,
-                    eng: Optional[engine.Engine] = None) -> jax.Array:
+                    eng: engine.Engine | None = None) -> jax.Array:
     """Run just the classifier head: (batch, fan_in) -> logits, every layer
     an engine-dispatched matmul (named fc1.. like :func:`cnn_forward`), so
     the batch-amortized SA-FC plans/trace/schedule apply unchanged."""
@@ -164,7 +164,7 @@ def fc_head_forward(head: Sequence[Tuple[int, int, str]], params: list,
 # ---------------------------------------------------------------------------
 # functional model (runs on the Pallas kernels)
 # ---------------------------------------------------------------------------
-def init_cnn(name: str, key, *, in_res: Optional[int] = None, in_ch: int = 3,
+def init_cnn(name: str, key, *, in_res: int | None = None, in_ch: int = 3,
              width_mult: float = 1.0, dtype=jnp.float32) -> list:
     spec, res0 = NETWORKS[name]
     res, ch = in_res or res0, in_ch
@@ -205,7 +205,7 @@ def conv_stage_len(name: str) -> int:
 
 def cnn_conv_stage(name: str, params: list, x: jax.Array, *,
                    backend: str = "pallas", interpret: bool = True,
-                   eng: Optional[engine.Engine] = None) -> jax.Array:
+                   eng: engine.Engine | None = None) -> jax.Array:
     """The SA-CONV stage of the dual-array pipeline: the conv+fused-pool
     stack, ``(N, H, W, C) -> (N, features)`` flattened for the classifier
     head.  Dispatch-for-dispatch identical to the CONV prefix of
@@ -244,7 +244,7 @@ def cnn_conv_stage(name: str, params: list, x: jax.Array, *,
 
 def cnn_fc_stage(name: str, params: list, feats: jax.Array, *,
                  backend: str = "pallas", interpret: bool = True,
-                 eng: Optional[engine.Engine] = None) -> jax.Array:
+                 eng: engine.Engine | None = None) -> jax.Array:
     """The SA-FC stage of the dual-array pipeline: the classifier head,
     ``(N, features) -> logits``.  Consumes the hand-off buffer
     :func:`cnn_conv_stage` produces; op names ``fc1..`` match the FC
@@ -263,7 +263,7 @@ def cnn_fc_stage(name: str, params: list, feats: jax.Array, *,
 
 def cnn_forward(name: str, params: list, x: jax.Array, *,
                 backend: str = "pallas", interpret: bool = True,
-                eng: Optional[engine.Engine] = None) -> jax.Array:
+                eng: engine.Engine | None = None) -> jax.Array:
     """x: (N, H, W, C) -> logits (N, classes).
 
     Supply ``eng`` to run the whole network under an explicit

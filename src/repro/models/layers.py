@@ -8,7 +8,6 @@ architecture.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +34,7 @@ def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
 # ---------------------------------------------------------------------------
 # norms
 # ---------------------------------------------------------------------------
-def rmsnorm(x: jax.Array, w: Optional[jax.Array], eps: float = 1e-6):
+def rmsnorm(x: jax.Array, w: jax.Array | None, eps: float = 1e-6):
     xf = x.astype(jnp.float32)
     nrm = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
     if w is not None:
@@ -43,8 +42,8 @@ def rmsnorm(x: jax.Array, w: Optional[jax.Array], eps: float = 1e-6):
     return nrm.astype(x.dtype)
 
 
-def layernorm(x: jax.Array, w: Optional[jax.Array],
-              b: Optional[jax.Array], eps: float = 1e-5):
+def layernorm(x: jax.Array, w: jax.Array | None,
+              b: jax.Array | None, eps: float = 1e-5):
     xf = x.astype(jnp.float32)
     mu = jnp.mean(xf, -1, keepdims=True)
     var = jnp.mean((xf - mu) ** 2, -1, keepdims=True)
@@ -56,7 +55,7 @@ def layernorm(x: jax.Array, w: Optional[jax.Array],
     return out.astype(x.dtype)
 
 
-def norm(cfg, p: Optional[dict], x: jax.Array) -> jax.Array:
+def norm(cfg, p: dict | None, x: jax.Array) -> jax.Array:
     """cfg.norm selects rmsnorm / layernorm / olmo's non-parametric LN."""
     if cfg.norm == "rmsnorm":
         return rmsnorm(x, p["w"] if p else None)
@@ -67,7 +66,7 @@ def norm(cfg, p: Optional[dict], x: jax.Array) -> jax.Array:
     raise ValueError(cfg.norm)
 
 
-def norm_params(cfg, key, d: int) -> Optional[dict]:
+def norm_params(cfg, key, d: int) -> dict | None:
     if cfg.norm == "rmsnorm":
         return {"w": jnp.zeros((d,), jnp.float32)}
     if cfg.norm == "layernorm":

@@ -13,7 +13,6 @@ records them for the dispatch trace.
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -194,7 +193,7 @@ def _n_groups(T: int, B: int) -> int:
 
 
 def moe_block(cfg, p: dict, x: jax.Array,
-              name: str = "moe") -> Tuple[jax.Array, jax.Array]:
+              name: str = "moe") -> tuple[jax.Array, jax.Array]:
     """x: (B, S, d) -> (out, aux_load_balance_loss)."""
     m = cfg.moe
     B, S, d = x.shape

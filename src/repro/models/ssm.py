@@ -9,7 +9,6 @@ Validated against the naive recurrence oracle ``repro.kernels.ref.ssd``.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +47,7 @@ def init_mamba(cfg, key, dtype) -> dict:
 # ---------------------------------------------------------------------------
 def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
                 c: jax.Array, *, chunk: int,
-                init_state: Optional[jax.Array] = None,
+                init_state: jax.Array | None = None,
                 return_state: bool = False):
     """Same contract as :func:`repro.kernels.ref.ssd`, chunk-parallel.
 
@@ -130,7 +129,7 @@ def _split(cfg, zxbcdt):
 
 
 def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
-                 prev: Optional[jax.Array] = None):
+                 prev: jax.Array | None = None):
     """Depthwise causal conv; ``prev`` is the (B, cw-1, ch) decode tail."""
     cw = w.shape[0]
     if prev is not None:
@@ -144,7 +143,7 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
 
 
 def mamba_forward(cfg, p: dict, x: jax.Array, *,
-                  cache: Optional[dict] = None,
+                  cache: dict | None = None,
                   return_cache: bool = False):
     """x: (B,S,d).  cache={'conv': (B,cw-1,ch), 'h': (B,H,D,N)} for decode."""
     eng = engine.current()

@@ -15,7 +15,7 @@ Modes:
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -44,7 +44,7 @@ def _init_block(cfg: ModelConfig, key, attn_kind: str, mlp_kind: str) -> dict:
     dt = _dtype(cfg)
     d, ff = cfg.d_model, cfg.d_ff
     ks = jax.random.split(key, 6)
-    p: Dict[str, Any] = {}
+    p: dict[str, Any] = {}
     if attn_kind == MAMBA:
         p["ln1"] = L.norm_params(cfg, ks[0], d)
         p["mamba"] = ssm_mod.init_mamba(cfg, ks[1], dt)
@@ -70,7 +70,7 @@ def init_params(cfg: ModelConfig, key) -> dict:
     reps, rem = cfg.stack_shape()
     keys = jax.random.split(key, 8)
 
-    params: Dict[str, Any] = {
+    params: dict[str, Any] = {
         "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dt),
         "final_norm": L.norm_params(cfg, keys[1], cfg.d_model),
     }

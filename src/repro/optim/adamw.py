@@ -7,7 +7,7 @@ difference between llama3-405b fitting in a 256-chip pod or not (see
 EXPERIMENTS.md §Dry-run)."""
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +46,7 @@ def clip_by_global_norm(grads, max_norm: float):
 
 
 def apply(params, grads, state: AdamWState,
-          tc: TrainConfig) -> Tuple[Any, AdamWState, dict]:
+          tc: TrainConfig) -> tuple[Any, AdamWState, dict]:
     grads, gnorm = clip_by_global_norm(grads, tc.grad_clip)
     step = state.step + 1
     lr = lr_schedule(tc, state.step)

@@ -13,7 +13,7 @@ DCN between pods (the reduce itself runs on the dequantized values inside
 pjit).  Analytic wire savings are recorded by the roofline report."""
 from __future__ import annotations
 
-from typing import Any, NamedTuple, Tuple
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +43,7 @@ def _topk_rt(g, frac: float = 0.01):
 
 
 def compress_grads(grads, state: CompressState,
-                   scheme: str) -> Tuple[Any, CompressState]:
+                   scheme: str) -> tuple[Any, CompressState]:
     """Returns (roundtripped grads, new error state).  scheme: int8|topk."""
     if scheme == "none":
         return grads, state

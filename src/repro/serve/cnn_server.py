@@ -38,7 +38,6 @@ serving-side twin of the stage-split schedule tables.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -53,7 +52,7 @@ class CNNRequest:
     uid: int
     image: np.ndarray                     # (H, W, C)
     done: bool = False
-    logits: Optional[np.ndarray] = None
+    logits: np.ndarray | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,13 +62,13 @@ class WaveReport:
     ``trace`` is the wave's full dispatch picture (conv stage then FC
     stage, every record stage/wave-tagged); ``conv_trace``/``fc_trace``
     are the per-stage views the pipeline hands between arrays."""
-    uids: Tuple[int, ...]
+    uids: tuple[int, ...]
     batch: int
     schedule_hits: int
     trace: DispatchTrace
     wave: int = 0
-    conv_trace: Optional[DispatchTrace] = None
-    fc_trace: Optional[DispatchTrace] = None
+    conv_trace: DispatchTrace | None = None
+    fc_trace: DispatchTrace | None = None
 
     @property
     def fc_records(self):
@@ -83,7 +82,7 @@ class _StageBuffer:
     wave's requests plus its in-flight conv-stage output (flattened
     features, NOT blocked on) and the conv-stage trace."""
     wave: int
-    requests: List[CNNRequest]
+    requests: list[CNNRequest]
     feats: object                         # jax.Array, possibly in flight
     conv_trace: DispatchTrace
 
@@ -103,11 +102,11 @@ class CNNServer:
     back-to-back.  Logits are bitwise identical either way."""
 
     def __init__(self, net: str, params: list, *,
-                 in_res: Optional[int] = None, in_ch: int = 3,
+                 in_res: int | None = None, in_ch: int = 3,
                  width_mult: float = 1.0, max_batch: int = 64,
                  dtype=jnp.float32,
                  pipeline: bool = True,
-                 engine: Optional[Engine] = None) -> None:
+                 engine: Engine | None = None) -> None:
         from repro.models import cnn
         spec, res0 = cnn.NETWORKS[net]
         self.net = net
@@ -122,11 +121,11 @@ class CNNServer:
             else Engine(backend="pallas", interpret=True)
         self._planner_microbatch = self._preferred_microbatch()
         self.microbatch = self._planner_microbatch
-        self.queue: List[CNNRequest] = []
-        self.waves: List[WaveReport] = []
+        self.queue: list[CNNRequest] = []
+        self.waves: list[WaveReport] = []
         self._wave_counter = 0
         self._uids: set = set()
-        self._inflight: Optional[_StageBuffer] = None
+        self._inflight: _StageBuffer | None = None
 
     @property
     def preferred_microbatch(self) -> int:
@@ -139,7 +138,7 @@ class CNNServer:
         return self._planner_microbatch
 
     # -- planning -----------------------------------------------------------
-    def _fc_shapes(self) -> List[Tuple[int, int, int]]:
+    def _fc_shapes(self) -> list[tuple[int, int, int]]:
         """(k, n, weight_bytes) of every FC layer, read off the actual
         parameters (the width-scaled geometry, not the paper table).
         int8 :class:`~repro.core.quant.QTensor` weights report their real
@@ -171,7 +170,7 @@ class CNNServer:
         return max(1, min(self.max_batch, plan.bb))
 
     def _stage_schedules(self, batch: int
-                         ) -> Tuple[LayerSchedule, LayerSchedule]:
+                         ) -> tuple[LayerSchedule, LayerSchedule]:
         return LayerSchedule.compile_cnn_stages(
             self.net, batch=batch, in_res=self.in_res, in_ch=self.in_ch,
             width_mult=self.width_mult, dtype=self.dtype,
@@ -194,7 +193,7 @@ class CNNServer:
         self.queue.append(req)
 
     def _conv_stage_dispatch(self, wave_idx: int,
-                             wave: List[CNNRequest]) -> _StageBuffer:
+                             wave: list[CNNRequest]) -> _StageBuffer:
         """Stage 1 (SA-CONV array): dispatch the conv+fused-pool stack of
         one wave and hand the (possibly still in-flight) flattened
         features to the stage buffer — no blocking here, so the next
@@ -207,7 +206,7 @@ class CNNServer:
             feats = cnn.cnn_conv_stage(self.net, self.params, x, eng=eng)
         return _StageBuffer(wave_idx, list(wave), feats, tr)
 
-    def _fc_stage_complete(self, buf: _StageBuffer) -> List[CNNRequest]:
+    def _fc_stage_complete(self, buf: _StageBuffer) -> list[CNNRequest]:
         """Stage 2 (SA-FC array): run the classifier head on the buffered
         features, block, deliver logits, and file the WaveReport."""
         from repro.models import cnn
@@ -231,14 +230,14 @@ class CNNServer:
             conv_trace=buf.conv_trace, fc_trace=tr))
         return buf.requests
 
-    def step_wave(self) -> List[CNNRequest]:
+    def step_wave(self) -> list[CNNRequest]:
         """Dispatch and complete ONE wave (up to ``microbatch`` requests,
         both stages, blocking); returns its completed requests, ``[]`` on
         an empty queue.  Any in-flight pipelined wave is completed first
         so wave order is preserved.  This is the wave-executor entry the
         multi-tenant zoo scheduler drives: the *zoo* decides which
         model's wave dispatches next, the model's server executes it."""
-        finished: List[CNNRequest] = []
+        finished: list[CNNRequest] = []
         if self._inflight is not None:
             finished.extend(self._fc_stage_complete(self._inflight))
             self._inflight = None
@@ -251,13 +250,13 @@ class CNNServer:
         finished.extend(self._fc_stage_complete(buf))
         return finished
 
-    def drain(self) -> List[CNNRequest]:
+    def drain(self) -> list[CNNRequest]:
         """Flush the server: complete the in-flight pipelined wave (if
         any), then serve everything still queued — including the final
         partial wave smaller than the planner's micro-batch.  Explicit
         and public so a zoo scheduler can flush a tenant's tail without
         poking at private stage buffers; ``run()`` ends with it."""
-        finished: List[CNNRequest] = []
+        finished: list[CNNRequest] = []
         if self._inflight is not None:
             finished.extend(self._fc_stage_complete(self._inflight))
             self._inflight = None
@@ -265,7 +264,7 @@ class CNNServer:
             finished.extend(self.step_wave())
         return finished
 
-    def run(self, *, pipelined: Optional[bool] = None) -> List[CNNRequest]:
+    def run(self, *, pipelined: bool | None = None) -> list[CNNRequest]:
         """Drain the queue in planner-preferred micro-batches; returns the
         completed requests (``[]`` for an empty queue).
 
@@ -276,7 +275,7 @@ class CNNServer:
         Sequential: each wave's two stages complete back-to-back.  The
         per-request logits are bitwise identical in both modes."""
         pipelined = self.pipeline if pipelined is None else pipelined
-        finished: List[CNNRequest] = []
+        finished: list[CNNRequest] = []
         while self.queue:
             wave = self.queue[:self.microbatch]
             self.queue = self.queue[len(wave):]

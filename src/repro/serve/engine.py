@@ -17,7 +17,6 @@ compiled object."""
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,13 +34,13 @@ class Request:
     prompt: np.ndarray            # (S,) int32
     max_new: int = 16
     done: bool = False
-    output: Optional[np.ndarray] = None
+    output: np.ndarray | None = None
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
                  max_seq: int = 256, cache_dtype=jnp.float32,
-                 engine: Optional[Engine] = None):
+                 engine: Engine | None = None):
         self.cfg = cfg
         self.params = params
         self.batch_size = batch_size
@@ -55,7 +54,7 @@ class ServeEngine:
             lambda p, b: prefill_step(cfg, p, b, max_seq, cache_dtype))
         self._decode = jax.jit(
             lambda p, c, t, pos: decode_step(cfg, p, c, t, pos))
-        self.queue: List[Request] = []
+        self.queue: list[Request] = []
 
     def _schedule(self, phase: str, batch: int,
                   seq: int = 1) -> LayerSchedule:
@@ -67,7 +66,7 @@ class ServeEngine:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def _admit_wave(self) -> List[Request]:
+    def _admit_wave(self) -> list[Request]:
         """Admit up to batch_size requests of EQUAL prompt length (padding
         a causal LM's prompt changes its content; a production engine
         would carry an attention mask instead)."""
@@ -81,9 +80,9 @@ class ServeEngine:
         self.queue = rest
         return wave
 
-    def run(self) -> List[Request]:
+    def run(self) -> list[Request]:
         """Drain the queue; returns completed requests."""
-        finished: List[Request] = []
+        finished: list[Request] = []
         while self.queue:
             wave = self._admit_wave()
             B = len(wave)

@@ -7,7 +7,6 @@ full-prompt forward emitting next-token logits + the cache.
 """
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,10 +33,10 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
 
 
 def greedy_generate(cfg: ModelConfig, params: dict, prompt: jax.Array,
-                    n_steps: int, *, max_seq: Optional[int] = None,
-                    extra: Optional[dict] = None,
+                    n_steps: int, *, max_seq: int | None = None,
+                    extra: dict | None = None,
                     cache_dtype=jnp.float32,
-                    engine: Optional[Engine] = None) -> jax.Array:
+                    engine: Engine | None = None) -> jax.Array:
     """Reference sampling loop (tests/examples).  prompt: (B, S).
 
     ``engine`` (optional) executes the loop under an explicit

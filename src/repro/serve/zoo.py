@@ -38,7 +38,7 @@ forward no matter which policy or coalescing admitted it.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+from collections.abc import Callable, Mapping, Sequence
 
 import numpy as np
 
@@ -59,20 +59,20 @@ class ZooRequest:
     image: np.ndarray                     # (H, W, C) of the model's server
     tenant: str = "default"
     arrival_s: float = 0.0
-    deadline_s: Optional[float] = None
+    deadline_s: float | None = None
     # -- filled by the scheduler/executor ----------------------------------
-    dispatch_s: Optional[float] = None    # SA-CONV start of its wave
-    finish_s: Optional[float] = None      # SA-FC completion of its wave
-    logits: Optional[np.ndarray] = None
+    dispatch_s: float | None = None    # SA-CONV start of its wave
+    finish_s: float | None = None      # SA-FC completion of its wave
+    logits: np.ndarray | None = None
     done: bool = False
 
     @property
-    def latency_s(self) -> Optional[float]:
+    def latency_s(self) -> float | None:
         return None if self.finish_s is None \
             else self.finish_s - self.arrival_s
 
     @property
-    def missed_deadline(self) -> Optional[bool]:
+    def missed_deadline(self) -> bool | None:
         """None = no SLO attached; else whether the modeled completion
         blew the absolute deadline."""
         if self.deadline_s is None:
@@ -90,11 +90,11 @@ class WaveDecision:
     index: int
     t_s: float
     model: str
-    uids: Tuple[int, ...]
+    uids: tuple[int, ...]
     batch: int
     conv_s: float
     fc_s: float
-    queue_depths: Tuple[Tuple[str, int], ...]   # pending per model at pick
+    queue_depths: tuple[tuple[str, int], ...]   # pending per model at pick
 
     @property
     def total_s(self) -> float:
@@ -110,15 +110,15 @@ class SchedulingPolicy:
 
     name = "base"
 
-    def pick(self, now: float, pending: Mapping[str, List[ZooRequest]],
+    def pick(self, now: float, pending: Mapping[str, list[ZooRequest]],
              cost: Callable[[str, int], WaveCost]) -> str:
         raise NotImplementedError
 
-    def wave_order(self, reqs: List[ZooRequest]) -> List[ZooRequest]:
+    def wave_order(self, reqs: list[ZooRequest]) -> list[ZooRequest]:
         return reqs
 
     @staticmethod
-    def _head_key(q: List[ZooRequest]) -> Tuple[float, int]:
+    def _head_key(q: list[ZooRequest]) -> tuple[float, int]:
         return (q[0].arrival_s, q[0].uid)
 
 
@@ -156,7 +156,7 @@ class EDFPolicy(SchedulingPolicy):
     name = "edf"
 
     @staticmethod
-    def _urgency(r: ZooRequest) -> Tuple[float, float, int]:
+    def _urgency(r: ZooRequest) -> tuple[float, float, int]:
         d = r.deadline_s if r.deadline_s is not None else float("inf")
         return (d, r.arrival_s, r.uid)
 
@@ -169,7 +169,7 @@ class EDFPolicy(SchedulingPolicy):
         return sorted(reqs, key=self._urgency)
 
 
-POLICIES: Dict[str, Callable[[], SchedulingPolicy]] = {
+POLICIES: dict[str, Callable[[], SchedulingPolicy]] = {
     "fifo": FIFOPolicy, "smf": ShortestMakespanPolicy, "edf": EDFPolicy,
 }
 
@@ -184,9 +184,9 @@ class ZooModel:
     not about the shrunken test instantiation executing it."""
 
     def __init__(self, spec: ZooModelSpec, params: list, *,
-                 in_res: Optional[int] = None, width_mult: float = 1.0,
+                 in_res: int | None = None, width_mult: float = 1.0,
                  max_batch: int = 8,
-                 engine: Optional[Engine] = None) -> None:
+                 engine: Engine | None = None) -> None:
         self.spec = spec
         self.name = spec.name
         self.params = params
@@ -208,9 +208,9 @@ class ZooModel:
 
 
 def build_zoo(names: Sequence[str], *, seed: int = 0,
-              in_res: Optional[Mapping[str, int]] = None,
+              in_res: Mapping[str, int] | None = None,
               width_mult: float = 1.0, max_batch: int = 8,
-              engine: Optional[Engine] = None) -> List[ZooModel]:
+              engine: Engine | None = None) -> list[ZooModel]:
     """Instantiate zoo models from the registry by name (seeded params;
     int8 variants quantized per-channel via
     :func:`~repro.core.quant.quantize_cnn_params`).  ``in_res`` maps net
@@ -259,12 +259,12 @@ class ZooReport:
     accounting (per-tenant latency percentiles, deadline misses,
     per-array utilization)."""
     policy: str
-    requests: Tuple[ZooRequest, ...]
-    decisions: Tuple[WaveDecision, ...]
+    requests: tuple[ZooRequest, ...]
+    decisions: tuple[WaveDecision, ...]
     makespan_s: float
     conv_busy_s: float
     fc_busy_s: float
-    per_tenant: Tuple[TenantStats, ...]
+    per_tenant: tuple[TenantStats, ...]
 
     @property
     def mean_latency_s(self) -> float:
@@ -321,11 +321,11 @@ class ModelZooServer:
     unbatched forward."""
 
     def __init__(self, models: Sequence[ZooModel], *,
-                 policy: Optional[SchedulingPolicy] = None,
-                 registry: Optional[ScheduleRegistry] = None) -> None:
+                 policy: SchedulingPolicy | None = None,
+                 registry: ScheduleRegistry | None = None) -> None:
         if not models:
             raise ValueError("a zoo needs at least one model")
-        self.models: Dict[str, ZooModel] = {}
+        self.models: dict[str, ZooModel] = {}
         for m in models:
             if m.name in self.models:
                 raise ValueError(f"duplicate zoo model {m.name!r}")
@@ -342,7 +342,7 @@ class ModelZooServer:
                 batch=srv.microbatch, in_res=srv.in_res, in_ch=srv.in_ch,
                 width_mult=srv.width_mult, dtype=srv.dtype,
                 policy=srv.engine.policy, params=srv.params)
-        self.tenants: Dict[str, List[ZooRequest]] = {}
+        self.tenants: dict[str, list[ZooRequest]] = {}
         self._uids: set = set()
 
     # -- admission ----------------------------------------------------------
@@ -367,17 +367,17 @@ class ModelZooServer:
         m = self.models[model]
         return m.wave_cost(min(queued, m.microbatch))
 
-    def _schedule(self, requests: List[ZooRequest]
-                  ) -> Tuple[List[WaveDecision],
-                             List[Tuple[str, List[ZooRequest]]]]:
+    def _schedule(self, requests: list[ZooRequest]
+                  ) -> tuple[list[WaveDecision],
+                             list[tuple[str, list[ZooRequest]]]]:
         """The modeled-time simulation: admit by arrival, pick waves with
         the policy whenever SA-CONV frees, overlap each wave's SA-FC
         stage with the next wave's SA-CONV stage (the dual-array
         pipeline), and stamp every request's dispatch/finish."""
         undisp = sorted(requests, key=lambda r: (r.arrival_s, r.uid))
-        pending: Dict[str, List[ZooRequest]] = {m: [] for m in self.models}
-        decisions: List[WaveDecision] = []
-        waves: List[Tuple[str, List[ZooRequest]]] = []
+        pending: dict[str, list[ZooRequest]] = {m: [] for m in self.models}
+        decisions: list[WaveDecision] = []
+        waves: list[tuple[str, list[ZooRequest]]] = []
         conv_free = fc_free = 0.0
         i, n = 0, len(undisp)
         done = 0
@@ -415,8 +415,8 @@ class ModelZooServer:
         return decisions, waves
 
     # -- execution (real kernels, bitwise per-request logits) ---------------
-    def _execute(self, waves: List[Tuple[str, List[ZooRequest]]]) -> None:
-        by_uid: Dict[int, ZooRequest] = {}
+    def _execute(self, waves: list[tuple[str, list[ZooRequest]]]) -> None:
+        by_uid: dict[int, ZooRequest] = {}
         for model, wave in waves:
             srv = self.models[model].server
             for r in wave:
@@ -435,7 +435,7 @@ class ModelZooServer:
 
     # -- accounting ---------------------------------------------------------
     @staticmethod
-    def _tenant_stats(tenant: str, reqs: List[ZooRequest]) -> TenantStats:
+    def _tenant_stats(tenant: str, reqs: list[ZooRequest]) -> TenantStats:
         lats = np.array([r.latency_s for r in reqs], dtype=np.float64)
         return TenantStats(
             tenant=tenant, n=len(reqs),
@@ -459,7 +459,7 @@ class ModelZooServer:
         self._execute(waves)
         makespan = max(r.finish_s for r in requests) \
             - min(r.arrival_s for r in requests)
-        by_tenant: Dict[str, List[ZooRequest]] = {}
+        by_tenant: dict[str, list[ZooRequest]] = {}
         for r in requests:
             by_tenant.setdefault(r.tenant, []).append(r)
         return ZooReport(

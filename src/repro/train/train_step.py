@@ -16,7 +16,7 @@ case by memoized lookup instead of re-planning at trace time.
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +43,7 @@ def make_loss(cfg: ModelConfig, tc: TrainConfig) -> Callable:
 
 
 def make_train_step(cfg: ModelConfig, tc: TrainConfig, *,
-                    engine: Optional[Engine] = None) -> Callable:
+                    engine: Engine | None = None) -> Callable:
     loss = make_loss(cfg, tc)
     grad_fn = jax.value_and_grad(loss, has_aux=True)
     eng = engine if engine is not None else Engine()

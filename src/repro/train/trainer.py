@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Optional
+from collections.abc import Callable
 
 import jax
 
@@ -30,16 +30,16 @@ class TrainerReport:
     steps_run: int
     final_loss: float
     losses: list
-    resumed_from: Optional[int]
+    resumed_from: int | None
     straggler_steps: list
 
 
 def run(cfg: ModelConfig, tc: TrainConfig, *,
-        ckpt_dir: Optional[str] = None,
+        ckpt_dir: str | None = None,
         ckpt_every: int = 50,
-        train_step_fn: Optional[Callable] = None,
-        state: Optional[tuple] = None,
-        data: Optional[SyntheticLM] = None,
+        train_step_fn: Callable | None = None,
+        state: tuple | None = None,
+        data: SyntheticLM | None = None,
         log_every: int = 10,
         log: Callable[[str], None] = print) -> TrainerReport:
     step_fn = train_step_fn or jax.jit(ts.make_train_step(cfg, tc))

@@ -104,3 +104,106 @@ def test_real_artifacts_self_consistent(cb):
         fields = extract(json.load(open(path)))
         assert fields, f"{name}: extractor found nothing to gate"
         assert cb.check_pair(path, path, extract) == []
+
+
+# -- gate failure paths (main / generate) -------------------------------------
+
+def _run_main(cb, monkeypatch, capsys, *argv):
+    monkeypatch.setattr("sys.argv", ["check_bench.py", *argv])
+    code = 0
+    try:
+        cb.main()
+    except SystemExit as e:
+        code = int(e.code or 0)
+    out = capsys.readouterr()
+    return code, out.out + out.err
+
+
+def test_no_baseline_at_all_fails_the_gate(cb, tmp_path, monkeypatch,
+                                           capsys):
+    """An empty baseline dir must not silently pass: skipping every
+    artifact means nothing was gated, which is itself a failure."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    code, out = _run_main(cb, monkeypatch, capsys,
+                          "--baseline-dir", str(base),
+                          "--fresh-dir", str(fresh))
+    assert code == 1
+    assert "no artifact pair was checked" in out
+    assert out.count("SKIP") == len(cb.ARTIFACTS)
+
+
+def test_missing_fresh_artifact_fails_the_gate(cb, tmp_path, monkeypatch,
+                                               capsys, pipeline_doc):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_pipeline.json", pipeline_doc)
+    code, out = _run_main(cb, monkeypatch, capsys,
+                          "--baseline-dir", str(base),
+                          "--fresh-dir", str(fresh),
+                          "--only", "BENCH_pipeline.json")
+    assert code == 1
+    assert "fresh artifact missing" in out
+
+
+def test_drifted_fresh_artifact_fails_the_gate(cb, tmp_path, monkeypatch,
+                                               capsys, pipeline_doc):
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_pipeline.json", pipeline_doc)
+    drifted = copy.deepcopy(pipeline_doc)
+    drifted["headline"]["crossover_batch_tpu_fp32"]["alexnet"] = 3
+    _write(fresh, "BENCH_pipeline.json", drifted)
+    code, out = _run_main(cb, monkeypatch, capsys,
+                          "--baseline-dir", str(base),
+                          "--fresh-dir", str(fresh),
+                          "--only", "BENCH_pipeline.json")
+    assert code == 1
+    assert "Planner regression(s) detected" in out
+
+
+def test_extra_fresh_field_is_not_a_regression(cb, tmp_path, monkeypatch,
+                                               capsys, pipeline_doc):
+    """Fresh artifacts may add configs/fields (growth, not drift)."""
+    base = tmp_path / "base"
+    fresh = tmp_path / "fresh"
+    base.mkdir(), fresh.mkdir()
+    _write(base, "BENCH_pipeline.json", pipeline_doc)
+    grown = copy.deepcopy(pipeline_doc)
+    grown["modeled"]["nets"]["resnet18"] = {"crossover_batch": {}}
+    grown["headline"]["new_metric"] = 1.0
+    _write(fresh, "BENCH_pipeline.json", grown)
+    code, out = _run_main(cb, monkeypatch, capsys,
+                          "--baseline-dir", str(base),
+                          "--fresh-dir", str(fresh),
+                          "--only", "BENCH_pipeline.json")
+    assert code == 0
+    assert "all 1 artifact(s) clean" in out
+
+
+def test_unknown_only_name_is_an_argparse_error(cb, tmp_path, monkeypatch,
+                                                capsys):
+    code, out = _run_main(cb, monkeypatch, capsys,
+                          "--fresh-dir", str(tmp_path),
+                          "--only", "BENCH_nope.json")
+    assert code == 2
+    assert "unknown artifact" in out
+
+
+@pytest.mark.slow
+def test_generate_round_trip_matches_committed_baselines(cb, tmp_path):
+    """--generate regenerates all four fast-tier artifacts (planner
+    focus, wall knobs shrunk) and every one matches its committed
+    baseline — the nightly gate's exact code path."""
+    errors = cb.generate_fresh(str(tmp_path))
+    assert errors == []
+    root = os.path.join(os.path.dirname(__file__), os.pardir)
+    for name, extract in cb.ARTIFACTS.items():
+        fresh = tmp_path / name
+        assert fresh.exists(), f"--generate did not write {name}"
+        diffs = cb.check_pair(os.path.join(root, name), str(fresh),
+                              extract)
+        assert diffs == [], f"{name}: {diffs}"

@@ -89,8 +89,12 @@ def test_fc_plan_tight_budget_shrinks_batch_tile():
 
 
 def test_fc_plan_impossible_budget_raises():
-    with pytest.raises(AssertionError):
+    from repro.core.dataflow import PlanError
+    with pytest.raises(PlanError) as ei:
         plan_fc(16, 256, 256, bytes_in=4, vmem_budget=1024)
+    assert ei.value.shape == (16, 256, 256)
+    assert ei.value.vmem_budget == 1024
+    assert "SA-FC" in str(ei.value)
 
 
 def test_fc_flip_batch_pinned():
