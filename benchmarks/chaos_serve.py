@@ -1,0 +1,441 @@
+"""Chaos benchmark for the zoo serving plane — seeded fault injection
+against the :class:`~repro.serve.zoo.ModelZooServer`'s recovery stack.
+
+The healthy zoo benchmark (``zoo_serve.py``) pins what the scheduler
+does when nothing goes wrong; this one pins what it does when
+*everything* goes wrong, reproducibly.  A seeded
+:class:`~repro.serve.faults.FaultInjector` makes wave attempts stall
+(mildly — straggler verdicts — and past the timeout — aborted retries),
+corrupt logit rows with NaN/Inf, and fail at dispatch with transient
+:class:`~repro.core.dataflow.PlanError`; a seeded overload burst
+(:func:`~benchmarks.timing.burst_arrivals`) slams the admission
+controller; one request arrives with its deadline already expired.
+
+Two EDF configurations serve the same trace and fault seed:
+
+* **edf_protected** — admission control on (bounded per-tenant queues +
+  predictive shedding) and int8 degraded fallback on; executed on the
+  real kernels;
+* **edf_minimal** — same chaos, no admission control (modeled-only):
+  the recovery floor every configuration shares — retry with capped
+  backoff, quarantine-never-drop, the isfinite integrity guard.
+
+Acceptance invariants recorded as internal checks (process exits
+nonzero on failure): every admitted request lands in exactly one
+terminal status (zero unaccounted) under both configurations; every
+*served* request's logits are bitwise equal to its **serving** model's
+unbatched forward (degraded requests compare against the int8 variant
+that actually served them) and contain no non-finite values; the seeded
+trace exercises every fault kind, at least one successful retry, at
+least one shed, at least one quarantine and at least one int8 fallback;
+the modeled schedule is run-to-run deterministic; and with faults
+disabled the same trace serves everything with zero robustness events.
+
+    PYTHONPATH=src python benchmarks/chaos_serve.py --fast --out BENCH_chaos.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+try:                                    # package import (benchmarks.run)
+    from benchmarks.timing import burst_arrivals, poisson_arrivals, \
+        raise_on_failed_checks, run_emit_cli, seeded_payloads
+except ImportError:                     # direct script execution
+    from timing import burst_arrivals, poisson_arrivals, \
+        raise_on_failed_checks, run_emit_cli, seeded_payloads
+
+Row = tuple[str, float, str]
+
+#: Execution geometry — identical to zoo_serve.py: width-scaled models
+#: (interpret-mode Pallas on CPU), full-geometry cost model.
+WIDTH_MULT = 0.125
+IN_RES = {"alexnet": 67, "vgg16": 32}
+MAX_BATCH = 4
+MODELS = ("alexnet", "vgg16", "alexnet-int8")
+
+#: The seeded trace per tier.  "web"/"rt" are steady tenants; "burst" is
+#: the overload clump burst_arrivals aims at the admission controller
+#: (its rate is far above servable, its deadline tight but int8-feasible
+#: so shedding and degraded fallback both trigger); "batch" is VGG-16 —
+#: the variant with **no** int8 sibling, exercising the no-fallback
+#: path.  One extra "stale" request per tier arrives with its deadline
+#: already expired (the admission-time typed rejection).
+TRACE_TIERS = {
+    "fast": {
+        "seed": 0,
+        "tenants": [
+            # (tenant, model, n, rate_hz, rel_deadline_s, burst_start_s)
+            ("web", "alexnet", 5, 6000.0, 4.0e-3, None),
+            ("burst", "alexnet", 8, 60000.0, 1.6e-3, 4.0e-4),
+            ("rt", "alexnet-int8", 5, 5000.0, 1.2e-3, None),
+            ("batch", "vgg16", 4, 9000.0, None, None),
+        ],
+    },
+    "full": {
+        "seed": 0,
+        "tenants": [
+            ("web", "alexnet", 10, 6000.0, 4.0e-3, None),
+            ("burst", "alexnet", 14, 60000.0, 1.6e-3, 4.0e-4),
+            ("rt", "alexnet-int8", 10, 5000.0, 1.2e-3, None),
+            ("batch", "vgg16", 8, 9000.0, None, None),
+        ],
+    },
+}
+
+#: The seeded fault mix: high enough rates that the fast tier's ~20
+#: wave attempts hit every kind; stall menu straddles the timeout
+#: factor (4x -> straggler verdict, 24x -> aborted + retried).
+CHAOS = {
+    "seed": 17,
+    "dispatch_fail_rate": 0.12,
+    "corrupt_rate": 0.14,
+    "stall_rate": 0.22,
+    "stall_factors": (4.0, 24.0),
+    "corrupt_frac": 0.5,
+}
+
+#: Recovery policy both configurations share.
+RECOVERY = {
+    "max_retries": 2,
+    "wave_timeout_factor": 8.0,
+    "fail_after": 2,
+    "recover_after": 2,
+}
+
+#: Admission policy of the protected configuration.
+ADMISSION = {"max_queue": 4, "predictive_shedding": True}
+
+#: generate-mode knob (benchmarks/check_bench.py): the modeled chaos
+#: schedule, statuses, event log and accounting are
+#: execution-independent, so the regression gate regenerates with
+#: execution (and the parity checks) off.
+EXECUTE = True
+
+
+def make_trace(tier: str) -> list[dict]:
+    """The seeded mixed request stream, overload burst included, plus
+    one stale-deadline request.  Same plain-dict shape as zoo_serve."""
+    cfg = TRACE_TIERS[tier]
+    raw = []
+    for ti, (tenant, model, n, rate, rel_dl, burst) in \
+            enumerate(cfg["tenants"]):
+        net = "vgg16" if model == "vgg16" else "alexnet"
+        res = IN_RES[net]
+        if burst is None:
+            arrivals = poisson_arrivals(n, rate, seed=cfg["seed"] + ti)
+        else:
+            arrivals = burst_arrivals(n, rate, start_s=burst,
+                                      seed=cfg["seed"] + ti)
+        images = seeded_payloads(n, (res, res, 3),
+                                 seed=200 + cfg["seed"] + ti)
+        for a, img in zip(arrivals, images):
+            raw.append({"tenant": tenant, "model": model, "arrival_s": a,
+                        "deadline_s": None if rel_dl is None else a + rel_dl,
+                        "image": img})
+    # the stale request: deadline expired before it even arrived
+    res = IN_RES["alexnet"]
+    raw.append({"tenant": "stale", "model": "alexnet",
+                "arrival_s": 2.0e-4, "deadline_s": 1.0e-4,
+                "image": seeded_payloads(1, (res, res, 3),
+                                         seed=999)[0]})
+    raw.sort(key=lambda r: (r["arrival_s"], r["tenant"]))
+    for uid, r in enumerate(raw):
+        r["uid"] = uid
+    return raw
+
+
+def build_server(*, protected: bool):
+    from repro.serve.faults import ChaosConfig, FaultInjector
+    from repro.serve.zoo import (AdmissionConfig, EDFPolicy,
+                                 ModelZooServer, RecoveryConfig,
+                                 build_zoo)
+
+    models = build_zoo(MODELS, seed=0, in_res=IN_RES,
+                       width_mult=WIDTH_MULT, max_batch=MAX_BATCH)
+    admission = AdmissionConfig(**ADMISSION) if protected \
+        else AdmissionConfig()
+    return ModelZooServer(
+        models, policy=EDFPolicy(),
+        faults=FaultInjector(ChaosConfig(**CHAOS)),
+        admission=admission,
+        recovery=RecoveryConfig(**RECOVERY))
+
+
+def run_config(name: str, trace: list[dict], *, protected: bool,
+               execute: bool):
+    """One full chaos drain; returns the ZooReport."""
+    from repro.serve.zoo import ZooRequest
+
+    zoo = build_server(protected=protected)
+    for r in trace:
+        zoo.submit(ZooRequest(uid=r["uid"], model=r["model"],
+                              image=r["image"], tenant=r["tenant"],
+                              arrival_s=r["arrival_s"],
+                              deadline_s=r["deadline_s"]))
+    return zoo.serve(execute=execute)
+
+
+def served_refs(report) -> dict[int, np.ndarray]:
+    """uid -> unbatched forward through the model that actually SERVED
+    the request (``served_by`` — the int8 sibling for degraded ones):
+    the parity reference under chaos."""
+    import jax.numpy as jnp
+
+    from repro.models import cnn
+    from repro.serve.zoo import build_zoo
+
+    models = {m.name: m for m in build_zoo(
+        MODELS, seed=0, in_res=IN_RES, width_mult=WIDTH_MULT,
+        max_batch=MAX_BATCH)}
+    refs = {}
+    for r in report.served:
+        m = models[r.served_by]
+        y = cnn.cnn_forward(m.spec.net, m.params,
+                            jnp.asarray(np.asarray(r.image))[None],
+                            eng=m.server.engine)
+        refs[r.uid] = np.asarray(y)[0]
+    return refs
+
+
+def _report_doc(report) -> dict:
+    """The deterministic (modeled-time) slice of one chaos drain."""
+    us = 1e6
+    return {
+        "decisions": [{
+            "index": d.index, "t_us": round(d.t_s * us, 3),
+            "model": d.model, "uids": list(d.uids), "batch": d.batch,
+            "conv_us": round(d.conv_s * us, 3),
+            "fc_us": round(d.fc_s * us, 3),
+            "fault": d.fault, "stall_factor": d.stall_factor,
+        } for d in report.decisions],
+        "events": [{
+            "t_us": round(e.t_s * us, 3), "attempt": e.attempt,
+            "model": e.model, "kind": e.kind, "uids": list(e.uids),
+        } for e in report.events],
+        "statuses": {str(r.uid): r.status for r in report.requests},
+        "served_by": {str(r.uid): r.served_by for r in report.served},
+        "per_tenant": {t.tenant: {
+            "n": t.n, "served": t.served, "shed": t.shed,
+            "quarantined": t.quarantined, "retries": t.retries,
+            "degraded": t.degraded, "shed_rate": round(t.shed_rate, 6),
+            "deadlines": t.deadlines, "misses": t.misses,
+            "p95_us": round(t.p95_s * us, 3),
+        } for t in report.per_tenant},
+        "health": {m: s for m, s in report.health},
+        "served": len(report.served),
+        "shed": len(report.shed),
+        "quarantined": len(report.quarantined),
+        "unaccounted": len(report.unaccounted),
+        "retry_count": report.retry_count,
+        "degraded_served": report.degraded_served,
+        "faulted_waves": report.degraded_waves,
+        "shed_rate": round(report.shed_rate, 6),
+        "miss_rate": round(report.miss_rate, 6),
+        "makespan_us": round(report.makespan_s * us, 3),
+    }
+
+
+def _accounting_checks(name: str, report, trace, checks: list) -> None:
+    statuses = [r.status for r in report.requests]
+    counts = {s: statuses.count(s) for s in
+              ("served", "shed", "quarantined")}
+    checks.append({
+        "name": f"accounting/{name}/zero_unaccounted",
+        "passed": (len(report.unaccounted) == 0
+                   and len(report.requests) == len(trace)
+                   and sum(counts.values()) == len(trace)),
+        "detail": f"{counts} of {len(trace)} requests, "
+                  f"{len(report.unaccounted)} unaccounted"})
+    checks.append({
+        "name": f"accounting/{name}/terminal_fields_consistent",
+        "passed": all(
+            (r.status == "served") == (r.error is None)
+            and (r.status != "served" or r.finish_s is not None)
+            for r in report.requests),
+        "detail": "served <=> no error; served => finish stamped"})
+
+
+def emit(out_path: str = "BENCH_chaos.json", *, tier: str = "fast"
+         ) -> list[Row]:
+    """Run the chaos benchmark, write the JSON artifact, return CSV rows
+    for benchmarks/run.py."""
+    checks: list[dict] = []
+    trace = make_trace(tier)
+
+    t0 = time.perf_counter()
+    protected = run_config("edf_protected", trace, protected=True,
+                           execute=EXECUTE)
+    minimal = run_config("edf_minimal", trace, protected=False,
+                         execute=False)
+    # modeled-schedule determinism: same trace + seed, fresh server
+    replay = run_config("edf_protected", trace, protected=True,
+                        execute=False)
+    # the healthy baseline: same trace, faults off, default admission
+    from repro.serve.zoo import (EDFPolicy, ModelZooServer, ZooRequest,
+                                 build_zoo)
+    healthy_zoo = ModelZooServer(
+        build_zoo(MODELS, seed=0, in_res=IN_RES, width_mult=WIDTH_MULT,
+                  max_batch=MAX_BATCH), policy=EDFPolicy())
+    for r in trace:
+        healthy_zoo.submit(ZooRequest(
+            uid=r["uid"], model=r["model"], image=r["image"],
+            tenant=r["tenant"], arrival_s=r["arrival_s"],
+            deadline_s=r["deadline_s"]))
+    healthy = healthy_zoo.serve(execute=False)
+    wall_s = time.perf_counter() - t0
+
+    docs = {"edf_protected": _report_doc(protected),
+            "edf_minimal": _report_doc(minimal)}
+
+    _accounting_checks("edf_protected", protected, trace, checks)
+    _accounting_checks("edf_minimal", minimal, trace, checks)
+
+    kinds = {e.kind for e in protected.events} \
+        | {e.kind for e in minimal.events}
+    want = {"stall", "timeout", "corrupt", "dispatch", "retry",
+            "quarantine", "shed", "degrade", "health"}
+    checks.append({
+        "name": "chaos/all_fault_and_response_kinds_observed",
+        "passed": want <= kinds,
+        "detail": f"missing: {sorted(want - kinds)}"})
+    checks.append({
+        "name": "chaos/retry_succeeded_at_least_once",
+        "passed": any(r.retries > 0 for r in protected.served),
+        "detail": f"{sum(r.retries > 0 for r in protected.served)} "
+                  "served requests needed retries"})
+    checks.append({
+        "name": "chaos/quarantine_carries_typed_errors",
+        "passed": all(r.error is not None
+                      and type(r.error).__name__ != "Exception"
+                      for r in protected.quarantined + minimal.quarantined),
+        "detail": f"{len(protected.quarantined)} + "
+                  f"{len(minimal.quarantined)} quarantined"})
+    checks.append({
+        "name": "admission/protected_sheds_stale_and_overload",
+        "passed": (any(type(r.error).__name__ == "StaleDeadlineError"
+                       for r in protected.shed)
+                   and len(protected.shed) > 1),
+        "detail": f"{len(protected.shed)} shed (incl. stale), "
+                  f"minimal shed {len(minimal.shed)}"})
+    checks.append({
+        "name": "degrade/int8_fallback_served_requests",
+        "passed": protected.degraded_served > 0 and all(
+            r.served_by == "alexnet-int8" for r in protected.served
+            if r.degraded),
+        "detail": f"{protected.degraded_served} served degraded"})
+    checks.append({
+        "name": "determinism/modeled_schedule_replay_identical",
+        "passed": _report_doc(replay) == docs["edf_protected"],
+        "detail": "same trace + seed -> identical decisions, events, "
+                  "statuses"})
+    checks.append({
+        "name": "healthy/faults_off_serves_everything_eventlessly",
+        "passed": (len(healthy.served) == len(trace) - 1   # stale one
+                   and healthy.retry_count == 0
+                   and not any(e.kind != "shed" for e in healthy.events)
+                   and len(healthy.shed) == 1),
+        "detail": f"{len(healthy.served)}/{len(trace)} served, "
+                  f"{len(healthy.events)} events (stale shed only)"})
+
+    if EXECUTE:
+        refs = served_refs(protected)
+        bad = [r.uid for r in protected.served
+               if not np.array_equal(r.logits, refs[r.uid])]
+        checks.append({
+            "name": "parity/served_logits_bitwise_equal_serving_model",
+            "passed": not bad,
+            "detail": f"{len(protected.served)} served "
+                      f"(incl. {protected.degraded_served} degraded), "
+                      f"mismatched uids: {bad[:8]}"})
+        nonfinite = [r.uid for r in protected.served
+                     if not np.isfinite(np.asarray(r.logits)).all()]
+        checks.append({
+            "name": "guard/no_served_request_carries_nonfinite_logits",
+            "passed": not nonfinite,
+            "detail": f"non-finite uids: {nonfinite[:8]}"})
+
+    headline = {
+        "n_requests": len(trace),
+        "protected_served": len(protected.served),
+        "protected_shed": len(protected.shed),
+        "protected_quarantined": len(protected.quarantined),
+        "protected_degraded_served": protected.degraded_served,
+        "protected_miss_rate": docs["edf_protected"]["miss_rate"],
+        "minimal_served": len(minimal.served),
+        "minimal_quarantined": len(minimal.quarantined),
+        "minimal_miss_rate": docs["edf_minimal"]["miss_rate"],
+        "faulted_waves": docs["edf_protected"]["faulted_waves"],
+        "retry_count": docs["edf_protected"]["retry_count"],
+    }
+
+    results = {"bench": "chaos_serve", "tier": tier,
+               "backend": "pallas-interpret-cpu",
+               "chaos": CHAOS | {"stall_factors": list(
+                   CHAOS["stall_factors"])},
+               "recovery": RECOVERY, "admission": ADMISSION,
+               "trace": {
+                   "seed": TRACE_TIERS[tier]["seed"],
+                   "n_requests": len(trace),
+                   "tenants": [{"tenant": t, "model": m, "n": n,
+                                "rate_hz": r,
+                                "deadline_rel_us": None if d is None
+                                else round(d * 1e6, 3),
+                                "burst_start_us": None if b is None
+                                else round(b * 1e6, 3)}
+                               for t, m, n, r, d, b in
+                               TRACE_TIERS[tier]["tenants"]],
+               },
+               "configs": docs,
+               "headline": headline,
+               "wall": {"executed": EXECUTE,
+                        "total_serve_s": round(wall_s, 3)},
+               "checks": checks}
+    os.makedirs(os.path.dirname(out_path) or ".", exist_ok=True)
+    with open(out_path, "w") as fh:
+        json.dump(results, fh, indent=2)
+
+    rows: list[Row] = [
+        ("chaos_serve/edf_protected", 0.0,
+         f"{headline['protected_served']} served / "
+         f"{headline['protected_shed']} shed / "
+         f"{headline['protected_quarantined']} quarantined of "
+         f"{headline['n_requests']}, {headline['faulted_waves']} faulted "
+         f"waves, {headline['protected_degraded_served']} degraded-served"),
+        ("chaos_serve/edf_minimal", 0.0,
+         f"{headline['minimal_served']} served / "
+         f"{headline['minimal_quarantined']} quarantined, miss rate "
+         f"{headline['minimal_miss_rate']:.3f}"),
+        ("chaos_serve/json", 0.0,
+         f"wrote {out_path} ({len(checks)} checks, "
+         f"{sum(not c['passed'] for c in checks)} failed)"),
+    ]
+    raise_on_failed_checks(checks)
+    return rows
+
+
+def bench_rows() -> list[Row]:
+    """run.py group entry: fast tier, writes BENCH_chaos.json."""
+    return emit("BENCH_chaos.json", tier="fast")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="BENCH_chaos.json")
+    tier = ap.add_mutually_exclusive_group()
+    tier.add_argument("--fast", dest="tier", action="store_const",
+                      const="fast", default="fast",
+                      help="CI smoke: ~23-request chaotic trace")
+    tier.add_argument("--full", dest="tier", action="store_const",
+                      const="full",
+                      help="nightly: ~43-request chaotic trace")
+    args = ap.parse_args()
+    run_emit_cli(emit, args.out, args.tier)
+
+
+if __name__ == "__main__":
+    main()

@@ -92,12 +92,30 @@ def _zoo_fields(doc: dict) -> dict:
     }
 
 
+def _chaos_fields(doc: dict) -> dict:
+    """chaos_serve: fault injection is seeded and the recovery schedule
+    runs in modeled virtual time, so each configuration's decision log
+    (with fault annotations), robustness event log, per-request terminal
+    statuses, per-tenant shed/quarantine/retry/degrade accounting and
+    the protected-vs-minimal headline are pure functions of the trace
+    seed + chaos seed.  Only ``wall`` is noise."""
+    return {
+        "chaos": doc.get("chaos", {}),
+        "recovery": doc.get("recovery", {}),
+        "admission": doc.get("admission", {}),
+        "trace": doc.get("trace", {}),
+        "configs": doc.get("configs", {}),
+        "headline": doc.get("headline", {}),
+    }
+
+
 #: artifact filename -> deterministic-subtree extractor
 ARTIFACTS: dict[str, Callable[[dict], dict]] = {
     "BENCH_conv_fused.json": _conv_fused_fields,
     "BENCH_fc_batch.json": _fc_batch_fields,
     "BENCH_pipeline.json": _pipeline_fields,
     "BENCH_zoo.json": _zoo_fields,
+    "BENCH_chaos.json": _chaos_fields,
 }
 
 
@@ -163,9 +181,10 @@ def generate_fresh(out_dir: str) -> list[str]:
     reported as a gate failure (its artifact is still written, so the
     field diff runs too)."""
     try:
-        from benchmarks import conv_fused, fc_batch, pipeline_serve, \
-            zoo_serve
+        from benchmarks import chaos_serve, conv_fused, fc_batch, \
+            pipeline_serve, zoo_serve
     except ImportError:
+        import chaos_serve
         import conv_fused
         import fc_batch
         import pipeline_serve
@@ -181,11 +200,16 @@ def generate_fresh(out_dir: str) -> list[str]:
     # execution-independent by construction — skip the real-kernel waves
     # (and their parity checks, which the test/bench jobs already ran)
     zoo_serve.EXECUTE = False
+    # likewise for chaos_serve: the fault schedule, statuses, event log
+    # and accounting are modeled-time; the executed parity/guard checks
+    # already ran in the bench jobs
+    chaos_serve.EXECUTE = False
     errors: list[str] = []
     for mod, name in ((conv_fused, "BENCH_conv_fused.json"),
                       (fc_batch, "BENCH_fc_batch.json"),
                       (pipeline_serve, "BENCH_pipeline.json"),
-                      (zoo_serve, "BENCH_zoo.json")):
+                      (zoo_serve, "BENCH_zoo.json"),
+                      (chaos_serve, "BENCH_chaos.json")):
         print(f"[check_bench] generating {name} (fast tier, planner "
               "focus) ...", flush=True)
         try:

@@ -10,8 +10,9 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import conv_fused, fc_batch, kernel_bench, \
-        paper_figures, pipeline_serve, roofline_report, zoo_serve
+    from benchmarks import chaos_serve, conv_fused, fc_batch, \
+        kernel_bench, paper_figures, pipeline_serve, roofline_report, \
+        zoo_serve
 
     groups = []
     groups += paper_figures.ALL
@@ -29,6 +30,9 @@ def main() -> None:
     # multi-tenant model-zoo serving: seeded Poisson trace under
     # fifo/smf/edf with per-tenant SLO accounting — writes BENCH_zoo.json
     groups += [zoo_serve.bench_rows]
+    # fault-injected zoo serving: seeded wave-level chaos vs admission
+    # control / retry / int8 degraded mode — writes BENCH_chaos.json
+    groups += [chaos_serve.bench_rows]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -51,6 +51,19 @@ def poisson_arrivals(n: int, rate_hz: float, *,
     return tuple(float(t) for t in np.cumsum(gaps))
 
 
+def burst_arrivals(n: int, rate_hz: float, *, start_s: float = 0.0,
+                   seed: int = 0) -> tuple[float, ...]:
+    """``n`` deterministic arrival times of an **overload burst**: a
+    Poisson clump at ``rate_hz`` (typically far above the servable rate)
+    whose first request lands at ``start_s``.  The chaos benchmark aims
+    these at the admission controller — unlike :func:`poisson_arrivals`
+    the burst starts at a chosen instant instead of drifting in."""
+    if n <= 0:
+        raise ValueError(f"n must be > 0, got {n}")
+    base = poisson_arrivals(n, rate_hz, seed=seed)
+    return tuple(start_s + (t - base[0]) for t in base)
+
+
 class BenchConsistencyError(AssertionError):
     """An internal benchmark consistency check failed.  The artifact is
     still written (with its ``checks`` section recording the failure) but

@@ -128,26 +128,9 @@ def run_policy(policy_name: str, trace: list[dict], *,
                               arrival_s=r["arrival_s"],
                               deadline_s=r["deadline_s"]))
     if not execute:
-        # modeled schedule only: decisions/latencies are
+        # modeled schedule only: decisions/latencies/statuses are
         # execution-independent by construction
-        requests = [r for q in zoo.tenants.values() for r in q]
-        for q in zoo.tenants.values():
-            q.clear()
-        decisions, _ = zoo._schedule(requests)
-        from repro.serve.zoo import ZooReport
-        by_tenant: dict[str, list] = {}
-        for r in requests:
-            by_tenant.setdefault(r.tenant, []).append(r)
-        return ZooReport(
-            policy=policy_name,
-            requests=tuple(sorted(requests, key=lambda r: r.uid)),
-            decisions=tuple(decisions),
-            makespan_s=max(r.finish_s for r in requests)
-            - min(r.arrival_s for r in requests),
-            conv_busy_s=sum(d.conv_s for d in decisions),
-            fc_busy_s=sum(d.fc_s for d in decisions),
-            per_tenant=tuple(zoo._tenant_stats(t, rs) for t, rs in
-                             sorted(by_tenant.items())))
+        return zoo.serve(execute=False)
     report = zoo.serve()
     bad = [r.uid for r in report.requests
            if not np.array_equal(r.logits, refs[r.uid])]

@@ -38,6 +38,7 @@ from repro.analysis.report import AnalysisReport, Finding
 DEFAULT_TARGETS = (
     "src/repro/serve/zoo.py",
     "src/repro/serve/cnn_server.py",
+    "src/repro/serve/faults.py",
     "benchmarks/timing.py",
 )
 

@@ -296,6 +296,16 @@ class WaveCost:
     def bottleneck_s(self) -> float:
         return max(self.conv_s, self.fc_s)
 
+    def scaled(self, factor: float) -> WaveCost:
+        """The same wave stretched ``factor``x on both arrays — how the
+        chaos harness prices a straggler stall (wall time ``k`` x the
+        modeled cost), and how the server decides whether a stalled wave
+        is merely late or past its timeout."""
+        if factor <= 0:
+            raise ValueError(f"factor must be > 0, got {factor}")
+        return WaveCost(self.net, self.batch, self.weight_bytes,
+                        self.conv_s * factor, self.fc_s * factor)
+
 
 _WAVE_COST_CACHE: dict = {}
 

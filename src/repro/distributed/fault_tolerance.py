@@ -46,19 +46,57 @@ class Heartbeat:
     last_seen: float
 
 
-class HeartbeatTracker:
-    """Deadline-based liveness: a node missing ``timeout`` seconds of
-    heartbeats is declared failed; the surviving set feeds elastic remesh."""
+class UnknownNodeError(KeyError):
+    """A heartbeat arrived for a node the tracker was never told about.
 
-    def __init__(self, nodes: list[str], timeout: float = 60.0):
-        now = time.monotonic()
+    Raised explicitly (instead of the bare ``KeyError`` a dict miss used
+    to leak) so control planes can branch on it — e.g. auto-register the
+    node via :meth:`HeartbeatTracker.register` on elastic scale-up."""
+
+    def __init__(self, node: str, known: tuple[str, ...]) -> None:
+        self.node = node
+        self.known = known
+        super().__init__(f"unknown node {node!r}; tracked: {known} "
+                         "(register() it for elastic scale-up)")
+
+    def __str__(self) -> str:            # KeyError quotes args[0] otherwise
+        return self.args[0]
+
+
+class HeartbeatTracker:
+    """Deadline-based liveness: a node missing **more than** ``timeout``
+    seconds of heartbeats is declared failed (exactly-at-deadline is
+    still alive); the surviving set feeds elastic remesh.
+
+    ``now`` defaults to the wall clock; pass it explicitly to run the
+    tracker on a modeled/virtual clock (the zoo scheduler does — every
+    call site stamps deterministic modeled seconds)."""
+
+    def __init__(self, nodes: list[str], timeout: float = 60.0,
+                 now: float | None = None):
+        t0 = now if now is not None else time.monotonic()
         self.timeout = timeout
         self._beats: dict[str, Heartbeat] = {
-            n: Heartbeat(n, now) for n in nodes}
+            n: Heartbeat(n, t0) for n in nodes}
+
+    def nodes(self) -> tuple[str, ...]:
+        return tuple(self._beats)
+
+    def register(self, node: str, now: float | None = None) -> None:
+        """Start tracking ``node`` (late registration — elastic
+        scale-up adds replicas after the tracker exists).  Registering a
+        node already tracked just refreshes its heartbeat."""
+        t0 = now if now is not None else time.monotonic()
+        if node in self._beats:
+            self._beats[node].last_seen = t0
+        else:
+            self._beats[node] = Heartbeat(node, t0)
 
     def beat(self, node: str, now: float | None = None) -> None:
-        self._beats[node].last_seen = now if now is not None \
-            else time.monotonic()
+        hb = self._beats.get(node)
+        if hb is None:
+            raise UnknownNodeError(node, self.nodes())
+        hb.last_seen = now if now is not None else time.monotonic()
 
     def failed(self, now: float | None = None) -> list[str]:
         now = now if now is not None else time.monotonic()

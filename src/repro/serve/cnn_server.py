@@ -236,19 +236,43 @@ class CNNServer:
         an empty queue.  Any in-flight pipelined wave is completed first
         so wave order is preserved.  This is the wave-executor entry the
         multi-tenant zoo scheduler drives: the *zoo* decides which
-        model's wave dispatches next, the model's server executes it."""
+        model's wave dispatches next, the model's server executes it.
+
+        A stage that raises never loses requests: the wave's undelivered
+        requests are pushed back to the head of the queue before the
+        exception propagates, so the caller can retry, cancel, or
+        quarantine them — the queue never silently wedges."""
         finished: list[CNNRequest] = []
         if self._inflight is not None:
-            finished.extend(self._fc_stage_complete(self._inflight))
-            self._inflight = None
+            buf, self._inflight = self._inflight, None
+            try:
+                finished.extend(self._fc_stage_complete(buf))
+            except Exception:
+                self.queue[:0] = [r for r in buf.requests if not r.done]
+                raise
         if not self.queue:
             return finished
         wave = self.queue[:self.microbatch]
         self.queue = self.queue[len(wave):]
-        buf = self._conv_stage_dispatch(self._wave_counter, wave)
-        self._wave_counter += 1
-        finished.extend(self._fc_stage_complete(buf))
+        try:
+            buf = self._conv_stage_dispatch(self._wave_counter, wave)
+            self._wave_counter += 1
+            finished.extend(self._fc_stage_complete(buf))
+        except Exception:
+            self.queue[:0] = [r for r in wave if not r.done]
+            raise
         return finished
+
+    def cancel(self, uids) -> list[CNNRequest]:
+        """Remove still-queued requests by uid and return them (uids stay
+        consumed — a cancelled uid names that request forever).  The zoo's
+        recovery path uses this to pull a failed wave's requests out of
+        the executor before quarantining them; unknown or already-served
+        uids are ignored."""
+        uids = set(uids)
+        cancelled = [r for r in self.queue if r.uid in uids]
+        self.queue = [r for r in self.queue if r.uid not in uids]
+        return cancelled
 
     def drain(self) -> list[CNNRequest]:
         """Flush the server: complete the in-flight pipelined wave (if

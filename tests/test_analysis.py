@@ -24,7 +24,7 @@ from repro.analysis import (
     verify_context,
     verify_stage_pair,
 )
-from repro.analysis.determinism import lint_file
+from repro.analysis.determinism import DEFAULT_TARGETS, lint_file
 from repro.analysis.passes import (
     check_accounting,
     check_coverage,
@@ -88,7 +88,7 @@ def test_clean_contexts_pass_every_pass(fc_ctx, conv_ctx):
 def test_determinism_lint_clean_on_repo_sources():
     report = lint_scheduler_sources()
     assert report.ok, report.summary()
-    assert report.checked_files == 3
+    assert report.checked_files == len(DEFAULT_TARGETS) == 4
 
 
 # -- seeded mutations: coverage ----------------------------------------------

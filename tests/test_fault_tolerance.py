@@ -1,0 +1,124 @@
+"""Fault-tolerance primitive edge cases: StepMonitor warmup boundary and
+window eviction, HeartbeatTracker deadline semantics + late
+registration, StepDeadline.  These primitives feed the zoo serving
+plane's health state machine, so their boundary behavior is contractual."""
+from __future__ import annotations
+
+import pytest
+
+from repro.distributed.fault_tolerance import (Heartbeat,
+                                               HeartbeatTracker,
+                                               StepDeadline, StepMonitor,
+                                               UnknownNodeError)
+
+# -- StepMonitor -------------------------------------------------------------
+
+
+def test_step_monitor_never_flags_during_warmup():
+    mon = StepMonitor(factor=3.0, warmup=5, window=50)
+    # wildly anomalous steps inside the warmup window are still "ok" —
+    # there is no trustworthy median yet
+    for step in range(5):
+        assert mon.observe(step, 1000.0 * (step + 1)) == "ok"
+
+
+def test_step_monitor_flags_exactly_after_warmup():
+    mon = StepMonitor(factor=3.0, warmup=3, window=50)
+    for step in range(3):
+        assert mon.observe(step, 1.0) == "ok"
+    # observation #warmup is the first that CAN be flagged
+    assert mon.observe(3, 3.0) == "ok"        # 3.0 == factor*median: not >
+    assert mon.observe(4, 3.0001) == "straggler"
+
+
+def test_step_monitor_straggler_samples_do_not_poison_median():
+    mon = StepMonitor(factor=3.0, warmup=3, window=50)
+    for step in range(3):
+        mon.observe(step, 1.0)
+    before = mon.median()
+    assert mon.observe(3, 100.0) == "straggler"
+    # the outlier was NOT added to the window: the median is unchanged
+    # and the next healthy step is still judged against it
+    assert mon.median() == before
+    assert mon.observe(4, 1.0) == "ok"
+    assert mon.observe(5, 100.0) == "straggler"
+
+
+def test_step_monitor_window_evicts_oldest():
+    mon = StepMonitor(factor=3.0, warmup=2, window=4)
+    # four slow-but-accepted steps, then four fast ones: the fast steps
+    # evict the slow era entirely (window=4), so the median adapts and a
+    # once-normal slow step becomes a straggler
+    for step in range(4):
+        assert mon.observe(step, 10.0) == "ok"
+    for step in range(4, 8):
+        assert mon.observe(step, 1.0) == "ok"
+    assert mon.median() == 1.0
+    assert mon.observe(8, 10.0) == "straggler"
+
+
+def test_step_monitor_empty_median_is_nan():
+    import math
+    assert math.isnan(StepMonitor().median())
+
+
+# -- HeartbeatTracker --------------------------------------------------------
+
+
+def test_heartbeat_exactly_at_deadline_is_alive():
+    hb = HeartbeatTracker(["a"], timeout=10.0, now=0.0)
+    # the contract is STRICTLY greater than timeout: a node last seen
+    # exactly `timeout` seconds ago is still alive
+    assert hb.failed(now=10.0) == []
+    assert hb.survivors(now=10.0) == ["a"]
+    assert hb.failed(now=10.0 + 1e-9) == ["a"]
+    assert hb.survivors(now=10.0 + 1e-9) == []
+
+
+def test_heartbeat_empty_survivors_and_empty_tracker():
+    hb = HeartbeatTracker(["a", "b"], timeout=1.0, now=0.0)
+    assert hb.survivors(now=100.0) == []          # everyone timed out
+    none = HeartbeatTracker([], timeout=1.0, now=0.0)
+    assert none.nodes() == ()
+    assert none.failed(now=100.0) == []           # nothing to fail
+    assert none.survivors(now=100.0) == []
+
+
+def test_heartbeat_unknown_node_raises_typed_error():
+    hb = HeartbeatTracker(["a"], timeout=1.0, now=0.0)
+    with pytest.raises(UnknownNodeError) as ei:
+        hb.beat("ghost", now=1.0)
+    assert ei.value.node == "ghost"
+    assert ei.value.known == ("a",)
+    assert "register()" in str(ei.value)
+    assert isinstance(ei.value, KeyError)         # back-compat catch sites
+
+
+def test_heartbeat_late_registration_enables_beat():
+    hb = HeartbeatTracker(["a"], timeout=5.0, now=0.0)
+    hb.register("b", now=3.0)                     # elastic scale-up
+    assert hb.nodes() == ("a", "b")
+    hb.beat("b", now=4.0)                         # no longer raises
+    # "a" heartbeated at 0.0, "b" at 4.0: at t=6 only "a" is dead
+    assert hb.failed(now=6.0) == ["a"]
+    # re-registering an existing node just refreshes its heartbeat
+    hb.register("a", now=6.0)
+    assert hb.failed(now=6.0) == []
+
+
+def test_heartbeat_modeled_clock_never_touches_wall_clock():
+    hb = HeartbeatTracker(["n"], timeout=2.0, now=100.0)
+    assert hb._beats["n"] == Heartbeat("n", 100.0)
+    hb.beat("n", now=101.0)
+    assert hb.failed(now=103.0) == []
+    assert hb.failed(now=103.0 + 1e-6) == ["n"]
+
+
+# -- StepDeadline ------------------------------------------------------------
+
+
+def test_step_deadline_not_expired_before_begin():
+    sd = StepDeadline(deadline_s=1.0)
+    assert not sd.expired(now=1e9)                # never began
+    sd.begin()
+    assert not sd.expired()
