@@ -109,6 +109,25 @@ def _chaos_fields(doc: dict) -> dict:
     }
 
 
+def _sharded_fields(doc: dict) -> dict:
+    """fleet_serve: the fleet schedule runs in modeled virtual time and
+    never reads the JAX device count, so every configuration's decision
+    log (with replica assignments), the fleet event log (kills, drains,
+    suspects, rejoins, replans), per-request terminal statuses,
+    per-replica accounting, the elastic mesh-plan history and the
+    scaling headline are pure functions of the trace seed + chaos plan.
+    Only ``wall`` (real execution timing + host device count) is
+    noise."""
+    return {
+        "fleet": doc.get("fleet", {}),
+        "chaos": doc.get("chaos", {}),
+        "recovery": doc.get("recovery", {}),
+        "trace": doc.get("trace", {}),
+        "configs": doc.get("configs", {}),
+        "headline": doc.get("headline", {}),
+    }
+
+
 #: artifact filename -> deterministic-subtree extractor
 ARTIFACTS: dict[str, Callable[[dict], dict]] = {
     "BENCH_conv_fused.json": _conv_fused_fields,
@@ -116,6 +135,7 @@ ARTIFACTS: dict[str, Callable[[dict], dict]] = {
     "BENCH_pipeline.json": _pipeline_fields,
     "BENCH_zoo.json": _zoo_fields,
     "BENCH_chaos.json": _chaos_fields,
+    "BENCH_sharded.json": _sharded_fields,
 }
 
 
@@ -182,11 +202,12 @@ def generate_fresh(out_dir: str) -> list[str]:
     field diff runs too)."""
     try:
         from benchmarks import chaos_serve, conv_fused, fc_batch, \
-            pipeline_serve, zoo_serve
+            fleet_serve, pipeline_serve, zoo_serve
     except ImportError:
         import chaos_serve
         import conv_fused
         import fc_batch
+        import fleet_serve
         import pipeline_serve
         import zoo_serve
     conv_fused.CONFIGS = {
@@ -204,12 +225,17 @@ def generate_fresh(out_dir: str) -> list[str]:
     # and accounting are modeled-time; the executed parity/guard checks
     # already ran in the bench jobs
     chaos_serve.EXECUTE = False
+    # and for fleet_serve: the fleet schedule is modeled-time AND
+    # device-count independent, so regeneration needs neither the real
+    # kernels nor a multi-device host
+    fleet_serve.EXECUTE = False
     errors: list[str] = []
     for mod, name in ((conv_fused, "BENCH_conv_fused.json"),
                       (fc_batch, "BENCH_fc_batch.json"),
                       (pipeline_serve, "BENCH_pipeline.json"),
                       (zoo_serve, "BENCH_zoo.json"),
-                      (chaos_serve, "BENCH_chaos.json")):
+                      (chaos_serve, "BENCH_chaos.json"),
+                      (fleet_serve, "BENCH_sharded.json")):
         print(f"[check_bench] generating {name} (fast tier, planner "
               "focus) ...", flush=True)
         try:

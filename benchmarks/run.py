@@ -11,8 +11,8 @@ import traceback
 
 def main() -> None:
     from benchmarks import chaos_serve, conv_fused, fc_batch, \
-        kernel_bench, paper_figures, pipeline_serve, roofline_report, \
-        zoo_serve
+        fleet_serve, kernel_bench, paper_figures, pipeline_serve, \
+        roofline_report, zoo_serve
 
     groups = []
     groups += paper_figures.ALL
@@ -33,6 +33,10 @@ def main() -> None:
     # fault-injected zoo serving: seeded wave-level chaos vs admission
     # control / retry / int8 degraded mode — writes BENCH_chaos.json
     groups += [chaos_serve.bench_rows]
+    # sharded serving fleet: N data-parallel replicas, replica-granular
+    # chaos (kill/partition/stall), drain-to-peer + elastic replan —
+    # writes BENCH_sharded.json
+    groups += [fleet_serve.bench_rows]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -37,6 +37,7 @@ from repro.analysis.report import AnalysisReport, Finding
 #: relative to the repo root
 DEFAULT_TARGETS = (
     "src/repro/serve/zoo.py",
+    "src/repro/serve/fleet.py",
     "src/repro/serve/cnn_server.py",
     "src/repro/serve/faults.py",
     "benchmarks/timing.py",

@@ -336,6 +336,111 @@ def zoo_wave_cost(net: str, batch: int, *, bytes_w: int | None = None,
     return hit
 
 
+# ---------------------------------------------------------------------------
+# N-replica fleet models: the single dual-array pipeline replicated
+# data-parallel across a device mesh.  Replicas share nothing but the
+# request stream, so the fleet-level makespan is the busiest replica's
+# pipeline makespan — waves split round-robin, ceil(waves/replicas) on
+# the busiest — and throughput scales until the per-replica fill/drain
+# overhead dominates.  These are the analytic twins the fleet scheduler
+# (repro.serve.fleet) and BENCH_sharded.json gate against.
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class FleetMakespan:
+    """Makespan of ``waves`` identical micro-batch waves spread over
+    ``replicas`` independent dual-array pipelines, vs. one replica
+    serving them all.  ``scaling`` is the healthy-path throughput
+    headline (>= 1, -> ``replicas`` as waves >> replicas);
+    ``efficiency`` divides out the replica count (1.0 = perfectly
+    linear)."""
+    replicas: int
+    waves: int
+    single: PipelineMakespan       # all waves on one replica
+    busiest: PipelineMakespan      # ceil(waves/replicas) on the busiest
+
+    @property
+    def single_replica_cycles(self) -> float:
+        return self.single.pipelined_cycles
+
+    @property
+    def fleet_cycles(self) -> float:
+        """The fleet finishes when its busiest replica does."""
+        return self.busiest.pipelined_cycles
+
+    @property
+    def scaling(self) -> float:
+        return self.single_replica_cycles / self.fleet_cycles
+
+    @property
+    def efficiency(self) -> float:
+        return self.scaling / self.replicas
+
+
+def fleet_makespan(net: str, batch: int = 1, waves: int = 8,
+                   replicas: int = 1, *,
+                   mpna: MPNAConfig = MPNA_PAPER,
+                   double_buffer: bool = True,
+                   bw_limited: bool = True) -> FleetMakespan:
+    """ASIC-side fleet model: ``replicas`` MPNA pipelines splitting
+    ``waves`` identical waves round-robin.  At ``replicas=1`` this is
+    exactly :func:`pipeline_makespan` (``scaling == 1``)."""
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    if waves < 1:
+        raise ValueError(f"waves must be >= 1, got {waves}")
+    single = pipeline_makespan(net, batch, waves, mpna=mpna,
+                               double_buffer=double_buffer,
+                               bw_limited=bw_limited)
+    busiest = pipeline_makespan(net, batch, _ceil(waves, replicas),
+                                mpna=mpna, double_buffer=double_buffer,
+                                bw_limited=bw_limited)
+    return FleetMakespan(replicas, waves, single, busiest)
+
+
+@dataclass(frozen=True)
+class FleetWaveCost:
+    """TPU-side fleet pricing: ``replicas`` independent copies of one
+    :class:`WaveCost` pipeline.  The steady-state dispatch period per
+    replica is ``wave.bottleneck_s``, so fleet service rate is
+    ``replicas`` waves per bottleneck — the quantity the fleet
+    scheduler's placement spreads load against."""
+    replicas: int
+    wave: WaveCost
+
+    @property
+    def service_rate_rps(self) -> float:
+        """Steady-state served requests/second across the fleet."""
+        return self.replicas * self.wave.batch / self.wave.bottleneck_s
+
+    def makespan_s(self, waves: int) -> float:
+        """``waves`` identical waves round-robin across the fleet: the
+        busiest replica's fill + drain + steady-state bottleneck terms
+        (the seconds-domain twin of :class:`FleetMakespan`)."""
+        if waves < 1:
+            raise ValueError(f"waves must be >= 1, got {waves}")
+        per = _ceil(waves, self.replicas)
+        return self.wave.total_s + (per - 1) * self.wave.bottleneck_s
+
+    def scaling(self, waves: int) -> float:
+        """Fleet speedup over one replica serving every wave."""
+        solo = FleetWaveCost(1, self.wave)
+        return solo.makespan_s(waves) / self.makespan_s(waves)
+
+
+def zoo_fleet_cost(net: str, batch: int, *, replicas: int,
+                   bytes_w: int | None = None, in_res: int | None = None,
+                   in_ch: int = 3, chip: TPUChip = TPU_V5E,
+                   vmem_budget: int | None = None) -> FleetWaveCost:
+    """Price a data-parallel fleet of ``replicas`` serving ``net`` waves
+    of ``batch`` samples — :func:`zoo_wave_cost` (memoized) lifted to the
+    fleet."""
+    if replicas < 1:
+        raise ValueError(f"replicas must be >= 1, got {replicas}")
+    return FleetWaveCost(replicas, zoo_wave_cost(
+        net, batch, bytes_w=bytes_w, in_res=in_res, in_ch=in_ch,
+        chip=chip, vmem_budget=vmem_budget))
+
+
 def tpu_pipeline_crossover_batch(net: str, *,
                                  in_res: int | None = None,
                                  in_ch: int = 3, bytes_in: int = 4,

@@ -6,11 +6,19 @@ propose the best (pod, data, model) mesh that (a) keeps the model-parallel
 degree (weights must still fit), (b) keeps batch divisibility, and (c)
 wastes the fewest survivors.  The trainer then rebuilds shardings for the
 new mesh and restores the same checkpoint — exercised end-to-end (at
-logical scale) in tests/test_elastic.py.
+logical scale) in tests/test_sharding.py.
+
+When survivors fall below the model-parallel degree no usable mesh
+exists; :func:`replan` raises the typed
+:class:`~repro.serve.errors.InsufficientReplicasError` (not a bare
+``assert``, which would vanish under ``python -O``) so fleet control
+planes can branch on it.
 """
 from __future__ import annotations
 
 import dataclasses
+
+from repro.serve.errors import InsufficientReplicasError
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,9 +46,16 @@ def replan(surviving_chips: int, *, model_parallel: int = 16,
 
     Keeps `model` fixed (sharded weights must fit exactly as before), and
     finds the largest power-of-two data degree that divides the batch.
+
+    Raises :class:`~repro.serve.errors.InsufficientReplicasError` when
+    the survivors cannot hold even one model-parallel weight shard.
     """
-    assert surviving_chips >= model_parallel, \
-        "fewer survivors than the model-parallel degree: cannot fit weights"
+    if surviving_chips < model_parallel:
+        raise InsufficientReplicasError(
+            f"{surviving_chips} survivor(s) cannot fit the "
+            f"model-parallel degree {model_parallel}: weights no longer "
+            "fit on any degraded mesh",
+            survivors=surviving_chips, required=model_parallel)
     pods = max(1, surviving_chips // pod_size)
     per_pod = surviving_chips // pods
     data = 1
@@ -54,10 +69,22 @@ def replan(surviving_chips: int, *, model_parallel: int = 16,
 
 def degrade_sequence(start_chips: int, failures: list[int],
                      **kw) -> list[MeshPlan]:
-    """Plans after each failure event (failures = chips lost per event)."""
+    """Plans after each failure event (failures = chips lost per event).
+
+    When a failure event drops survivors below the model-parallel floor,
+    the :class:`~repro.serve.errors.InsufficientReplicasError` is
+    re-raised with the event index and loss history attached so the
+    caller sees *which* failure broke the fleet, not just that one did.
+    """
     plans = []
     chips = start_chips
-    for lost in failures:
+    for event, lost in enumerate(failures):
         chips -= lost
-        plans.append(replan(chips, **kw))
+        try:
+            plans.append(replan(chips, **kw))
+        except InsufficientReplicasError as e:
+            raise InsufficientReplicasError(
+                f"failure event {event} (lost {lost} chips, {chips} "
+                f"remain of {start_chips}): {e.message}",
+                survivors=e.survivors, required=e.required) from e
     return plans

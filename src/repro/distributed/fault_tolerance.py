@@ -92,6 +92,17 @@ class HeartbeatTracker:
         else:
             self._beats[node] = Heartbeat(node, t0)
 
+    def deregister(self, node: str) -> None:
+        """Stop tracking ``node`` — the elastic scale-*down* mirror of
+        :meth:`register`.  A replica that was quarantined or declared
+        dead must be drained from the tracker, or it keeps tripping
+        :meth:`failed` (and shrinking :meth:`survivors`) forever even
+        though the control plane already acted on it.  Deregistering a
+        node the tracker never knew raises :class:`UnknownNodeError`."""
+        if node not in self._beats:
+            raise UnknownNodeError(node, self.nodes())
+        del self._beats[node]
+
     def beat(self, node: str, now: float | None = None) -> None:
         hb = self._beats.get(node)
         if hb is None:

@@ -20,7 +20,15 @@ instead of a silent drop or a wedged queue:
   degenerate case: the deadline was already in the past at arrival;
 * :class:`CorruptOutputError` — the per-wave ``jnp.isfinite`` integrity
   guard rejected the request's logits (NaN/Inf) and the retry budget is
-  spent.
+  spent;
+* :class:`ReplicaLostError` — the replica holding the request died (or
+  every replica did) and the fleet could not re-place it within the
+  retry budget: the replica-level analogue of a wave failure;
+* :class:`InsufficientReplicasError` — elastic replanning found fewer
+  survivors than the model-parallel degree (the sharded weights no
+  longer fit), so no degraded mesh exists.  Raised by
+  :func:`repro.distributed.elastic.replan` — a *typed* error rather
+  than a bare ``assert`` so it survives ``python -O``.
 
 ``PlanError`` is re-exported so ``from repro.serve.errors import ...``
 covers every failure cause one ``except`` ladder needs.
@@ -30,7 +38,8 @@ from __future__ import annotations
 from repro.core.dataflow import PlanError
 
 __all__ = ["ServeError", "WaveTimeoutError", "RequestShedError",
-           "StaleDeadlineError", "CorruptOutputError", "PlanError"]
+           "StaleDeadlineError", "CorruptOutputError",
+           "ReplicaLostError", "InsufficientReplicasError", "PlanError"]
 
 
 class ServeError(RuntimeError):
@@ -74,3 +83,30 @@ class StaleDeadlineError(RequestShedError):
 class CorruptOutputError(ServeError):
     """The wave-level ``isfinite`` integrity guard found NaN/Inf in this
     request's logits; serving them would return garbage with a 200."""
+
+
+class ReplicaLostError(ServeError):
+    """The replica this request was placed on (or retried onto) died, and
+    no surviving peer could absorb it within the retry budget — the
+    fleet-level analogue of :class:`WaveTimeoutError`.  Carries the
+    replica id so drain/quarantine logs are actionable."""
+
+    def __init__(self, message: str, *, uid: int | None = None,
+                 model: str = "", replica: str = "") -> None:
+        self.replica = replica
+        if replica:
+            message = f"{message} [replica={replica}]"
+        super().__init__(message, uid=uid, model=model)
+
+
+class InsufficientReplicasError(ServeError):
+    """Elastic replanning cannot produce any usable mesh: the survivor
+    count fell below the model-parallel degree, so the sharded weights no
+    longer fit.  ``survivors``/``required`` let control planes report the
+    exact deficit."""
+
+    def __init__(self, message: str, *, survivors: int | None = None,
+                 required: int | None = None) -> None:
+        self.survivors = survivors
+        self.required = required
+        super().__init__(message)

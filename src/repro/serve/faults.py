@@ -28,6 +28,28 @@ The injector never touches the scheduler's clock or queues itself — the
 attempt and applies its own recovery policy (retry with capped backoff,
 quarantine, degrade), so the same seeded fault trace can be replayed
 against different recovery configurations.
+
+Replica-granular chaos (fleet level)
+------------------------------------
+:class:`ReplicaChaosConfig` / :class:`ReplicaFaultInjector` lift the
+same discipline one level up, to the sharded fleet
+(:class:`~repro.serve.fleet.FleetServer`):
+
+* ``kills`` — a replica dies at a configured modeled instant: its
+  queued waves drain to surviving peers and its in-flight wave fails
+  and retries elsewhere;
+* ``partitions`` — a replica's heartbeats are dropped for a modeled
+  window: the failure detector declares it suspect (drain + replan),
+  and when the partition heals it beats again and rejoins;
+* transient device ``stall`` — seeded per ``(replica, attempt)``: the
+  wave's stage times stretch ``k``x, tripping the per-replica
+  :class:`~repro.distributed.fault_tolerance.StepMonitor` (mild ``k``)
+  or the wave timeout (hard ``k``).
+
+Kill and partition schedules are explicit configuration (a chaos *plan*,
+replayable by construction); only the stall verdict is drawn, from
+``(seed, replica_index, attempt)`` — so a fleet chaos trace is exactly
+as pinnable as a wave-level one.
 """
 from __future__ import annotations
 
@@ -37,7 +59,8 @@ import numpy as np
 
 from repro.core.dataflow import PlanError
 
-__all__ = ["ChaosConfig", "WaveFaults", "FaultInjector"]
+__all__ = ["ChaosConfig", "WaveFaults", "FaultInjector",
+           "ReplicaChaosConfig", "ReplicaFaults", "ReplicaFaultInjector"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,3 +171,102 @@ class FaultInjector:
         itself throws."""
         return PlanError("chaos: injected transient dispatch failure",
                          op=f"zoo.wave[{model}]@attempt{attempt}")
+
+
+# ---------------------------------------------------------------------------
+# replica-granular chaos: the fleet-level fault plane
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ReplicaChaosConfig:
+    """Fleet-level chaos plan.  ``kills`` are ``(replica_id, t_s)`` death
+    instants (modeled seconds — the replica is gone for good);
+    ``partitions`` are ``(replica_id, start_s, end_s)`` windows during
+    which the replica's heartbeats are dropped (it keeps computing;
+    the failure detector must suspect it and the fleet must survive the
+    false positive).  ``stall_rate`` draws a transient device stall per
+    wave attempt from ``(seed, replica_index, attempt)``;
+    ``stall_factors`` is the stall-multiplier menu, exactly as in
+    :class:`ChaosConfig`."""
+    seed: int = 0
+    stall_rate: float = 0.0
+    stall_factors: tuple[float, ...] = (4.0,)
+    kills: tuple[tuple[str, float], ...] = ()
+    partitions: tuple[tuple[str, float, float], ...] = ()
+
+    def __post_init__(self) -> None:
+        if not 0.0 <= self.stall_rate <= 1.0:
+            raise ValueError(f"stall_rate must be in [0, 1], "
+                             f"got {self.stall_rate}")
+        if self.stall_rate > 0 and (not self.stall_factors
+                                    or min(self.stall_factors) <= 1.0):
+            raise ValueError("stall_factors must all be > 1.0")
+        for rid, t in self.kills:
+            if t < 0:
+                raise ValueError(f"kill time for {rid!r} must be >= 0, "
+                                 f"got {t}")
+        if len({rid for rid, _ in self.kills}) != len(self.kills):
+            raise ValueError("at most one kill per replica")
+        for rid, s, e in self.partitions:
+            if not 0 <= s < e:
+                raise ValueError(f"partition window for {rid!r} must "
+                                 f"satisfy 0 <= start < end, got "
+                                 f"[{s}, {e})")
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplicaFaults:
+    """The stall verdict for one wave attempt on one replica (death and
+    partition are schedule-driven, not drawn — see
+    :class:`ReplicaChaosConfig`)."""
+    replica_index: int
+    attempt: int
+    kind: str                               # "none" | "stall"
+    stall_factor: float = 1.0
+
+    @property
+    def is_clean(self) -> bool:
+        return self.kind == "none"
+
+
+class ReplicaFaultInjector:
+    """Derives fleet-level faults from the chaos plan: kill/partition
+    lookups are pure config reads, and the per-attempt stall verdict is a
+    pure function of ``(seed, replica_index, attempt)`` — so the fleet
+    scheduler's whole event log replays bit-for-bit."""
+
+    def __init__(self, config: ReplicaChaosConfig) -> None:
+        self.config = config
+        self._kills = dict(config.kills)
+
+    def _rng(self, replica_index: int, attempt: int) -> np.random.Generator:
+        return np.random.default_rng(
+            (self.config.seed, replica_index, attempt))
+
+    def wave_faults(self, replica_index: int, attempt: int) -> ReplicaFaults:
+        """The seeded stall verdict for wave ``attempt`` dispatched on
+        replica ``replica_index``."""
+        c = self.config
+        if c.stall_rate <= 0.0:
+            return ReplicaFaults(replica_index, attempt, "none")
+        rng = self._rng(replica_index, attempt)
+        if float(rng.random()) < c.stall_rate:
+            factor = c.stall_factors[int(rng.integers(len(c.stall_factors)))]
+            return ReplicaFaults(replica_index, attempt, "stall",
+                                 stall_factor=float(factor))
+        return ReplicaFaults(replica_index, attempt, "none")
+
+    def kill_time(self, replica_id: str) -> float | None:
+        """When (if ever) this replica dies, in modeled seconds."""
+        return self._kills.get(replica_id)
+
+    def partition_windows(self, replica_id: str
+                          ) -> tuple[tuple[float, float], ...]:
+        """This replica's heartbeat-drop windows, in config order."""
+        return tuple((s, e) for rid, s, e in self.config.partitions
+                     if rid == replica_id)
+
+    def partitioned(self, replica_id: str, t_s: float) -> bool:
+        """Whether a heartbeat from this replica at ``t_s`` is dropped
+        (windows are half-open: ``start <= t < end``)."""
+        return any(s <= t_s < e
+                   for s, e in self.partition_windows(replica_id))

@@ -104,7 +104,10 @@ class ZooRequest:
     rejected it) or ``"quarantined"`` (execution failed past the retry
     budget); ``error`` carries the typed cause for the latter two.
     ``allow_degraded`` opts the request into int8 fallback service;
-    ``served_by`` records which variant actually served it."""
+    ``served_by`` records which variant actually served it; ``replica``
+    records which fleet replica it was last placed on (stamped by
+    :class:`~repro.serve.fleet.FleetServer`; always ``None`` in a
+    single-replica zoo)."""
     uid: int
     model: str
     image: np.ndarray                     # (H, W, C) of the model's server
@@ -121,6 +124,7 @@ class ZooRequest:
     error: ServeError | None = None
     retries: int = 0
     served_by: str | None = None       # variant that served it (may degrade)
+    replica: str | None = None         # fleet replica it was last placed on
 
     @property
     def latency_s(self) -> float | None:

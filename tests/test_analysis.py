@@ -88,7 +88,7 @@ def test_clean_contexts_pass_every_pass(fc_ctx, conv_ctx):
 def test_determinism_lint_clean_on_repo_sources():
     report = lint_scheduler_sources()
     assert report.ok, report.summary()
-    assert report.checked_files == len(DEFAULT_TARGETS) == 4
+    assert report.checked_files == len(DEFAULT_TARGETS) == 5
 
 
 # -- seeded mutations: coverage ----------------------------------------------

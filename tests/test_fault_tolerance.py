@@ -106,6 +106,34 @@ def test_heartbeat_late_registration_enables_beat():
     assert hb.failed(now=6.0) == []
 
 
+def test_heartbeat_deregister_mirrors_register():
+    hb = HeartbeatTracker(["a", "b"], timeout=5.0, now=0.0)
+    hb.deregister("b")                            # elastic scale-down
+    assert hb.nodes() == ("a",)
+    # a deregistered node stops tripping failed()/shrinking survivors()
+    assert hb.failed(now=100.0) == ["a"]
+    assert hb.survivors(now=100.0) == []
+    with pytest.raises(UnknownNodeError):
+        hb.beat("b", now=1.0)                     # really gone
+    # register() round-trips it back in (scale-up after scale-down)
+    hb.register("b", now=100.0)
+    assert hb.nodes() == ("a", "b")
+    assert hb.survivors(now=100.0) == ["b"]
+
+
+def test_heartbeat_deregister_unknown_node_raises_typed_error():
+    hb = HeartbeatTracker(["a"], timeout=1.0, now=0.0)
+    with pytest.raises(UnknownNodeError) as ei:
+        hb.deregister("ghost")
+    assert ei.value.node == "ghost"
+    assert ei.value.known == ("a",)
+    # deregister consumes the node: a second call is an error too
+    hb.deregister("a")
+    with pytest.raises(UnknownNodeError):
+        hb.deregister("a")
+    assert hb.nodes() == ()
+
+
 def test_heartbeat_modeled_clock_never_touches_wall_clock():
     hb = HeartbeatTracker(["n"], timeout=2.0, now=100.0)
     assert hb._beats["n"] == Heartbeat("n", 100.0)

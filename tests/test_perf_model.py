@@ -105,3 +105,54 @@ def test_mpna_weights_fetched_once():
     acts_upper = sum(l.ifm[0] * l.ifm[1] * l.ifm[2]
                      + l.ofm[0] * l.ofm[1] * l.ofm[2] for l in st)
     assert w_total <= t.dram_bytes <= w_total + acts_upper
+
+
+def test_fleet_makespan_scaling_and_efficiency():
+    """N replicas splitting W identical waves finish when the busiest
+    (ceil(W/N) waves) does; scaling -> N as W >> N, == 1 at N=1."""
+    one = PM.fleet_makespan("alexnet", batch=4, waves=8, replicas=1)
+    assert one.scaling == 1.0 and one.efficiency == 1.0
+    assert one.fleet_cycles == one.single_replica_cycles
+    four = PM.fleet_makespan("alexnet", batch=4, waves=8, replicas=4)
+    assert four.scaling > 1.0
+    assert four.efficiency <= 1.0
+    # busiest replica runs exactly ceil(8/4)=2 waves
+    assert four.busiest.waves == 2
+    # waves >> replicas: scaling approaches the replica count
+    big = PM.fleet_makespan("alexnet", batch=4, waves=400, replicas=4)
+    assert 3.5 < big.scaling <= 4.0
+
+
+def test_fleet_makespan_ragged_split_is_busiest_bound():
+    """9 waves over 4 replicas: the busiest holds 3, not 9/4."""
+    m = PM.fleet_makespan("vgg16", batch=2, waves=9, replicas=4)
+    assert m.busiest.waves == 3
+    # adding a 10th wave does not slow the fleet (still 3 on busiest)
+    m2 = PM.fleet_makespan("vgg16", batch=2, waves=10, replicas=4)
+    assert m2.fleet_cycles <= m.fleet_cycles * (1 + 1e-12)
+
+
+def test_fleet_makespan_validates_inputs():
+    import pytest
+    with pytest.raises(ValueError):
+        PM.fleet_makespan("alexnet", replicas=0)
+    with pytest.raises(ValueError):
+        PM.fleet_makespan("alexnet", waves=0)
+    with pytest.raises(ValueError):
+        PM.zoo_fleet_cost("alexnet", 4, replicas=0)
+
+
+def test_zoo_fleet_cost_service_rate_and_makespan():
+    """TPU-side fleet pricing: service rate is linear in replicas, the
+    fleet makespan is busiest-replica bound, and one replica reproduces
+    the plain wave cost."""
+    solo = PM.zoo_fleet_cost("alexnet", 4, replicas=1)
+    quad = PM.zoo_fleet_cost("alexnet", 4, replicas=4)
+    assert quad.wave == solo.wave                 # same memoized pricing
+    assert quad.service_rate_rps == 4 * solo.service_rate_rps
+    assert solo.makespan_s(1) == solo.wave.total_s
+    # 8 waves: solo pays 7 extra bottleneck periods, the quad only 1
+    assert solo.makespan_s(8) == solo.wave.total_s + 7 * solo.wave.bottleneck_s
+    assert quad.makespan_s(8) == quad.wave.total_s + 1 * quad.wave.bottleneck_s
+    assert quad.scaling(8) > 1.0
+    assert solo.scaling(8) == 1.0
