@@ -116,12 +116,17 @@ def _sharded_fields(doc: dict) -> dict:
     suspects, rejoins, replans), per-request terminal statuses,
     per-replica accounting, the elastic mesh-plan history and the
     scaling headline are pure functions of the trace seed + chaos plan.
-    Only ``wall`` (real execution timing + host device count) is
-    noise."""
+    The ``sharded`` section (cooperative-wave speedup curves, break-even
+    and crossover pins, amortization) is pure planner math, and the
+    ``sharded_r4`` / ``sharded_chaos_r4`` configs inside ``configs``
+    carry the cooperative decision log (with shard assignments) and the
+    abort/reshard event history.  Only ``wall`` (real execution timing +
+    host device count) is noise."""
     return {
         "fleet": doc.get("fleet", {}),
         "chaos": doc.get("chaos", {}),
         "recovery": doc.get("recovery", {}),
+        "sharded": doc.get("sharded", {}),
         "trace": doc.get("trace", {}),
         "configs": doc.get("configs", {}),
         "headline": doc.get("headline", {}),

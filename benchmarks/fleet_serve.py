@@ -18,7 +18,28 @@ seeded compute-bound trace:
   mid-trace (its in-flight wave is lost and retried on a peer, its
   queue drains), replica ``r2``'s heartbeats are partitioned for a
   window (suspect -> drain -> rejoin), and seeded transient stalls trip
-  the per-replica straggler/timeout machinery throughout.
+  the per-replica straggler/timeout machinery throughout;
+* **sharded_r4** — the same payload stream collapsed to a ``t=0``
+  burst (the cooperative case: a batch larger than one replica's
+  micro-batch lands at once) with ``shard_waves=True``: when a model's
+  fleet-wide backlog exceeds one replica's planner micro-batch, the
+  fleet cuts ONE cooperative wave of up to ``data x bb`` rows and
+  executes it across the healthy-replica mesh (``jax.device_put`` with
+  a ``NamedSharding`` over the ``("data",)`` axis) instead of fanning
+  independent per-replica waves.  Executed on the real kernels with a
+  bitwise-parity gate against the single-device unbatched forward;
+* **sharded_chaos_r4** — the sharded burst with a replica killed
+  mid-cooperative-wave: the wave aborts (``shard_abort``), its rows are
+  re-sharded over the survivors (``elastic.reshard_wave`` ->
+  ``reshard`` event), and the retries honor the pinned assignment —
+  again executed, again gated bitwise.
+
+The **modeled sharded section** pins the cooperative cost model
+(:func:`repro.core.perf_model.sharded_wave_cost`): per-model speedup
+curves over batch at ``data=4``, the break-even batch (5 — one row past
+a full micro-batch wave, exactly the shard trigger), the >= 1.5x
+crossover batch (13), and the weight-stream amortization (4.0x at a
+full ``data x bb`` wave).
 
 Acceptance invariants recorded as internal checks (process exits
 nonzero on failure): zero unaccounted requests in every configuration;
@@ -104,6 +125,16 @@ CHAOS = {
     "partitions": (("r2", 4.0e-4, 1.1e-3),),
 }
 
+#: The sharded-chaos plan: r2 dies inside the first cooperative wave
+#: (sharded waves start dispatching once the fleet-wide backlog of a
+#: model passes the micro-batch, well before 300us on this trace and
+#: finish after it), forcing the abort -> reshard -> pinned-retry path.
+SHARD_CHAOS = {"kills": (("r2", 3.0e-4),)}
+
+#: Cooperative-wave geometry for the modeled sharded section.
+SHARD_DATA = 4
+SHARD_THRESHOLD = 1.5
+
 #: Recovery policy (zoo defaults plus a heartbeat deadline shorter than
 #: the partition window, so the suspect verdict actually fires).
 RECOVERY = {
@@ -149,29 +180,33 @@ def _models():
                      width_mult=WIDTH_MULT, max_batch=MAX_BATCH)
 
 
-def build_fleet(*, n_replicas: int, chaos: bool = False,
-                placement: str = "least-loaded"):
+def build_fleet(*, n_replicas: int, chaos: dict | bool = False,
+                placement: str = "least-loaded",
+                shard_waves: bool = False):
     from repro.serve.faults import (ReplicaChaosConfig,
                                     ReplicaFaultInjector)
     from repro.serve.fleet import PLACEMENTS, FleetServer
     from repro.serve.zoo import FIFOPolicy, RecoveryConfig
 
-    faults = ReplicaFaultInjector(ReplicaChaosConfig(**CHAOS)) \
-        if chaos else None
+    plan = CHAOS if chaos is True else chaos
+    faults = ReplicaFaultInjector(ReplicaChaosConfig(**plan)) \
+        if plan else None
     return FleetServer(
         _models(), n_replicas=n_replicas, policy=FIFOPolicy(),
         placement=PLACEMENTS[placement](), faults=faults,
-        recovery=RecoveryConfig(**RECOVERY), **FLEET)
+        recovery=RecoveryConfig(**RECOVERY), shard_waves=shard_waves,
+        **FLEET)
 
 
 def run_config(trace: list[dict], *, n_replicas: int,
-               chaos: bool = False, placement: str = "least-loaded",
-               execute: bool = False):
+               chaos: dict | bool = False,
+               placement: str = "least-loaded",
+               shard_waves: bool = False, execute: bool = False):
     """One full fleet drain; returns the FleetReport."""
     from repro.serve.zoo import ZooRequest
 
     fleet = build_fleet(n_replicas=n_replicas, chaos=chaos,
-                        placement=placement)
+                        placement=placement, shard_waves=shard_waves)
     for r in trace:
         fleet.submit(ZooRequest(uid=r["uid"], model=r["model"],
                                 image=r["image"], tenant=r["tenant"],
@@ -199,8 +234,11 @@ def served_refs(report) -> dict[int, np.ndarray]:
 
 
 def _decision_key(d) -> tuple:
+    # getattr: zoo decisions (the healthy_r1 equivalence witness) have
+    # no shards field — a single pipeline can never shard a wave
     return (round(d.t_s * 1e9), d.model, d.uids, d.batch,
-            round(d.conv_s * 1e9), round(d.fc_s * 1e9))
+            round(d.conv_s * 1e9), round(d.fc_s * 1e9),
+            tuple(getattr(d, "shards", ())))
 
 
 def _report_doc(report) -> dict:
@@ -215,6 +253,7 @@ def _report_doc(report) -> dict:
             "conv_us": round(d.conv_s * us, 3),
             "fc_us": round(d.fc_s * us, 3),
             "fault": d.fault, "stall_factor": d.stall_factor,
+            "shards": list(d.shards),
         } for d in report.decisions],
         "events": [{
             "t_us": round(e.t_s * us, 3), "replica": e.replica,
@@ -267,6 +306,16 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
     chaos4 = run_config(trace, n_replicas=4, chaos=True,
                         execute=EXECUTE)
     replay = run_config(trace, n_replicas=4, chaos=True)
+    # cooperative waves need a backlog wider than one replica's
+    # micro-batch to pool while peers are free — the same payloads as a
+    # t=0 burst (a staggered Poisson stream drains one request at a
+    # time onto whichever replica frees first, so nothing ever pools)
+    burst = [dict(r, arrival_s=0.0) for r in trace]
+    sharded4 = run_config(burst, n_replicas=4, shard_waves=True,
+                          execute=EXECUTE)
+    sharded_replay = run_config(burst, n_replicas=4, shard_waves=True)
+    shard_chaos4 = run_config(burst, n_replicas=4, chaos=SHARD_CHAOS,
+                              shard_waves=True, execute=EXECUTE)
     # the zoo-equivalence witness: same trace through the single-pipeline
     # scheduler this fleet generalizes
     from repro.serve.zoo import FIFOPolicy, ModelZooServer, ZooRequest
@@ -283,11 +332,15 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
             for nr, rep in healthy.items()}
     docs["round_robin_r4"] = _report_doc(rr4)
     docs["chaos_r4"] = _report_doc(chaos4)
+    docs["sharded_r4"] = _report_doc(sharded4)
+    docs["sharded_chaos_r4"] = _report_doc(shard_chaos4)
 
     for name, rep in [("healthy_r1", healthy[1]),
                       ("healthy_r2", healthy[2]),
                       ("healthy_r4", healthy[4]),
-                      ("round_robin_r4", rr4), ("chaos_r4", chaos4)]:
+                      ("round_robin_r4", rr4), ("chaos_r4", chaos4),
+                      ("sharded_r4", sharded4),
+                      ("sharded_chaos_r4", shard_chaos4)]:
         _accounting_checks(name, rep, trace, checks)
 
     scaling = healthy[1].makespan_s / healthy[4].makespan_s
@@ -358,6 +411,66 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
         "detail": "same trace + chaos plan -> identical decisions, "
                   "events, statuses"})
 
+    # -- the cooperative sharded-wave section ---------------------------
+    sharded_models = {}
+    for m in _models():
+        full_b = SHARD_DATA * m.microbatch
+        curve = {b: m.sharded_wave_cost(b, SHARD_DATA).speedup
+                 for b in range(1, full_b + 1)}
+        be = next((b for b, s in curve.items() if s >= 1.0), None)
+        co = next((b for b, s in curve.items()
+                   if s >= SHARD_THRESHOLD), None)
+        full = m.sharded_wave_cost(full_b, SHARD_DATA)
+        sharded_models[m.name] = {
+            "microbatch": m.microbatch,
+            "break_even_batch": be,
+            "crossover_batch": co,
+            "speedup_at_crossover": (round(curve[co], 4)
+                                     if co is not None else None),
+            "speedup_full_wave": round(curve[full_b], 4),
+            "amortization_full_wave": round(full.amortization, 4),
+            "broadcast_us": round(full.broadcast_s * 1e6, 3),
+            "weight_stream_mib":
+                round(full.weight_stream_bytes / 2**20, 3),
+            "speedup_by_batch": {str(b): round(s, 4)
+                                 for b, s in curve.items()},
+        }
+    checks.append({
+        "name": "sharded/modeled_break_even_one_past_full_microbatch",
+        "passed": all(v["break_even_batch"] == v["microbatch"] + 1
+                      for v in sharded_models.values()),
+        "detail": f"break-even batches "
+                  f"{ {k: v['break_even_batch'] for k, v in sharded_models.items()} }"
+                  f" vs microbatch {MAX_BATCH} (the shard trigger)"})
+    checks.append({
+        "name": "sharded/modeled_speedup_at_crossover_at_least_1p5x",
+        "passed": all(v["crossover_batch"] is not None
+                      and v["speedup_at_crossover"] >= SHARD_THRESHOLD
+                      for v in sharded_models.values()),
+        "detail": f"{ {k: (v['crossover_batch'], v['speedup_at_crossover']) for k, v in sharded_models.items()} }"})
+    coop = [d for d in sharded4.decisions if d.shards]
+    checks.append({
+        "name": "sharded/cooperative_waves_formed_at_full_mesh",
+        "passed": (len(coop) >= 1
+                   and any(len(d.shards) == 4 and d.batch > MAX_BATCH
+                           for d in coop)),
+        "detail": f"{len(coop)} cooperative waves, batches "
+                  f"{[d.batch for d in coop]}, widest mesh "
+                  f"{max((len(d.shards) for d in coop), default=0)}"})
+    checks.append({
+        "name": "determinism/sharded_schedule_replay_identical",
+        "passed": _report_doc(sharded_replay) == docs["sharded_r4"],
+        "detail": "same trace + shard_waves -> identical cooperative "
+                  "decisions, events, statuses"})
+    sck = {e.kind for e in shard_chaos4.events}
+    checks.append({
+        "name": "sharded_chaos/midwave_kill_abort_reshard_retry_served",
+        "passed": ({"shard_abort", "reshard", "kill", "retry"} <= sck
+                   and len(shard_chaos4.served) == len(trace)),
+        "detail": f"event kinds {sorted(sck)}; "
+                  f"{len(shard_chaos4.served)}/{len(trace)} served "
+                  f"after the mid-wave kill"})
+
     if EXECUTE:
         refs = served_refs(chaos4)
         bad = [r.uid for r in chaos4.served
@@ -374,6 +487,23 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
             "name": "guard/no_served_request_carries_nonfinite_logits",
             "passed": not nonfinite,
             "detail": f"non-finite uids: {nonfinite[:8]}"})
+        # the tentpole invariant: a cooperative wave sharded over
+        # data=4 serves every row bitwise-equal to the single-device
+        # unbatched forward — with and without a mid-wave replica kill
+        for name, rep in (("sharded_r4", sharded4),
+                          ("sharded_chaos_r4", shard_chaos4)):
+            srefs = served_refs(rep)
+            sbad = [r.uid for r in rep.served
+                    if not np.array_equal(np.asarray(r.logits),
+                                          srefs[r.uid])]
+            checks.append({
+                "name": f"parity/{name}_logits_bitwise_equal_"
+                        "single_device",
+                "passed": not sbad,
+                "detail": f"{len(rep.served)} served "
+                          f"({sum(1 for d in rep.decisions if d.shards)}"
+                          " cooperative waves), mismatched uids: "
+                          f"{sbad[:8]}"})
 
     headline = {
         "n_requests": len(trace),
@@ -388,6 +518,20 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
         "chaos_retry_count": chaos4.retry_count,
         "chaos_drained": len(chaos4.drained_uids),
         "chaos_makespan_us": docs["chaos_r4"]["makespan_us"],
+        "sharded_break_even_batch": {
+            k: v["break_even_batch"] for k, v in sharded_models.items()},
+        "sharded_crossover_batch": {
+            k: v["crossover_batch"] for k, v in sharded_models.items()},
+        "sharded_speedup_at_crossover": {
+            k: v["speedup_at_crossover"]
+            for k, v in sharded_models.items()},
+        "sharded_amortization_full_wave": {
+            k: v["amortization_full_wave"]
+            for k, v in sharded_models.items()},
+        "sharded_cooperative_waves": len(coop),
+        "sharded_makespan_us": docs["sharded_r4"]["makespan_us"],
+        "sharded_chaos_makespan_us":
+            docs["sharded_chaos_r4"]["makespan_us"],
     }
 
     import jax
@@ -401,6 +545,12 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
                    "kills": [list(k) for k in CHAOS["kills"]],
                    "partitions": [list(p) for p in CHAOS["partitions"]]},
                "recovery": RECOVERY,
+               "sharded": {
+                   "data": SHARD_DATA, "threshold": SHARD_THRESHOLD,
+                   "chaos": {"kills": [list(k)
+                                       for k in SHARD_CHAOS["kills"]]},
+                   "models": sharded_models,
+               },
                "trace": {
                    "seed": TRACE_TIERS[tier]["seed"],
                    "n_requests": len(trace),
@@ -431,6 +581,12 @@ def emit(out_path: str = "BENCH_sharded.json", *, tier: str = "fast"
          f"{headline['n_requests']} with 1 dead replica, "
          f"{headline['chaos_drained']} drained, "
          f"{headline['chaos_retry_count']} retries"),
+        ("fleet_serve/sharded_waves", 0.0,
+         f"{headline['sharded_cooperative_waves']} cooperative waves, "
+         "modeled crossover b="
+         f"{headline['sharded_crossover_batch']['alexnet']} at "
+         f"{headline['sharded_speedup_at_crossover']['alexnet']:.2f}x "
+         "(alexnet, data=4)"),
         ("fleet_serve/json", 0.0,
          f"wrote {out_path} ({len(checks)} checks, "
          f"{sum(not c['passed'] for c in checks)} failed)"),

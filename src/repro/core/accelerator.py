@@ -64,6 +64,7 @@ class TPUChip:
     peak_flops_bf16: float = 197e12    # FLOP/s
     hbm_bandwidth: float = 819e9       # B/s
     ici_link_bandwidth: float = 50e9   # B/s per link (per direction)
+    ici_links: int = 4                 # full-duplex inter-chip links
     hbm_bytes: int = 16 * 1024**3      # v5e: 16 GiB
     vmem_bytes: int = 128 * 1024**2    # ~128 MiB VMEM
     # usable VMEM budget the dataflow planner hands to kernels
@@ -74,6 +75,21 @@ class TPUChip:
         """Arithmetic-intensity ridge point — the SA-CONV/SA-FC dispatch
         threshold of :mod:`repro.core.engine`."""
         return self.peak_flops_bf16 / self.hbm_bandwidth   # ~240 FLOP/B
+
+    @property
+    def ici_broadcast_bandwidth(self) -> float:
+        """Delivered one-to-all broadcast bandwidth of the mesh fabric.
+
+        A long weight stream is broadcast down ``2 * ici_links``
+        edge-disjoint spanning trees (each full-duplex link carries a
+        distinct chunk in each direction — the standard torus-collective
+        trick), so the stream is delivered at the aggregate link rate,
+        not a single link's.  ~400 GB/s with the v5e defaults; still
+        well under ``hbm_bandwidth``, which is why a cooperative sharded
+        wave must *amortize* the one broadcast over the whole fleet
+        batch to beat per-replica HBM streams (see
+        :func:`repro.core.perf_model.sharded_wave_cost`)."""
+        return 2 * self.ici_links * self.ici_link_bandwidth
 
 
 MPNA_PAPER = MPNAConfig()

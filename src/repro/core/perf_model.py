@@ -477,6 +477,152 @@ def tpu_pipeline_crossover_batch(net: str, *,
     return hi
 
 
+# ---------------------------------------------------------------------------
+# Cooperative sharded waves: ONE wave split row-wise over the fleet's
+# ("data",) mesh instead of independent per-replica waves.  The pricing
+# follows the paper's topology one level up: MPNA's parallel arrays share
+# a single DRAM interface, so N concurrent weight streams serialize on it
+# — the fleet twin is N replica lanes contending for the host memory
+# system.  A cooperative wave replaces the N private FC weight streams
+# with ONE stream broadcast over the ICI fabric, paid once and amortized
+# across the whole fleet batch (up to data x bb rows).  These costs are
+# deliberately a *different accounting* from FleetWaveCost above, which
+# models fully private per-replica HBM (the optimistic bound).
+# ---------------------------------------------------------------------------
+
+#: Per-hop latency of the inter-chip fabric, seconds — charged once per
+#: tree hop when a sharded wave broadcasts its FC weight stream.
+ICI_HOP_LATENCY_S = 1e-6
+
+
+@dataclass(frozen=True)
+class ShardedWaveCost:
+    """Modeled cost of ONE cooperative wave of ``batch`` samples split
+    row-wise over ``data`` replicas, vs. the same batch served as
+    independent per-replica waves cut at ``microbatch``.
+
+    Sharded lane: every replica runs the conv stage on its
+    ``ceil(batch/data)``-row shard (compute-bound, fully parallel), then
+    the FC weight stream is read from HBM **once** and broadcast
+    tile-wise over the ICI fabric (``broadcast_s``; all replicas consume
+    the stream as it arrives, SA-FC style), plus the shard's residual
+    activation traffic (``fc_rest_s``).
+
+    Independent lane (shared-interface accounting): ``ceil(batch /
+    microbatch)`` waves whose FC weight streams serialize on the one
+    memory interface while their conv stages overlap —
+    ``independent_s``.  ``speedup`` and the ``amortization`` of HBM
+    weight bytes are the two headlines BENCH_sharded.json gates."""
+    net: str
+    batch: int
+    data: int
+    microbatch: int
+    weight_bytes: int              # bytes/weight of the FC stream (1=int8)
+    shard: int                     # rows per replica, ceil(batch/data)
+    conv_s: float                  # conv stage on one shard
+    broadcast_s: float             # one weight delivery for the whole wave
+    fc_rest_s: float               # shard's FC activation/compute residue
+    independent_s: float           # same batch, per-replica waves, shared bus
+    weight_stream_bytes: int       # W: one full FC weight stream
+    independent_weight_bytes: int  # ceil(batch/microbatch) * W
+
+    @property
+    def fc_s(self) -> float:
+        """FC stage of the sharded wave: broadcast + residue."""
+        return self.broadcast_s + self.fc_rest_s
+
+    @property
+    def total_s(self) -> float:
+        return self.conv_s + self.fc_s
+
+    @property
+    def speedup(self) -> float:
+        """Modeled makespan win over independent per-replica waves."""
+        return self.independent_s / self.total_s
+
+    @property
+    def amortization(self) -> float:
+        """HBM weight-byte amortization: streams the independent lane
+        pays for this batch vs. the single broadcast-fed stream."""
+        return self.independent_weight_bytes / self.weight_stream_bytes
+
+    def as_wave_cost(self) -> WaveCost:
+        """The sharded wave viewed as a plain :class:`WaveCost` so the
+        fleet scheduler's stall/timeout machinery (``scaled``,
+        ``total_s``, ``bottleneck_s``) applies unchanged."""
+        return WaveCost(self.net, self.batch, self.weight_bytes,
+                        self.conv_s, self.fc_s)
+
+
+def sharded_wave_cost(net: str, batch: int, data: int, *,
+                      microbatch: int, bytes_w: int | None = None,
+                      in_res: int | None = None, in_ch: int = 3,
+                      chip: TPUChip = TPU_V5E,
+                      vmem_budget: int | None = None) -> ShardedWaveCost:
+    """Price one cooperative ``data``-way sharded wave of ``batch``
+    samples of ``net`` against the independent per-replica alternative
+    (waves of ``microbatch`` on a shared memory interface).  Memoized
+    via :func:`zoo_wave_cost`; full paper geometry like every zoo cost."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    if data < 1:
+        raise ValueError(f"data must be >= 1, got {data}")
+    if microbatch < 1:
+        raise ValueError(f"microbatch must be >= 1, got {microbatch}")
+    kw = dict(bytes_w=bytes_w, in_res=in_res, in_ch=in_ch, chip=chip,
+              vmem_budget=vmem_budget)
+    shard = -(-batch // data)
+    wave_shard = zoo_wave_cost(net, shard, **kw)
+    stream_w = sum(
+        row.compulsory_weight_bytes
+        for row in pallas_fc_traffic(net, batch=1, in_res=in_res,
+                                     in_ch=in_ch, bytes_w=bytes_w,
+                                     chip=chip, vmem_budget=vmem_budget))
+    weight_stream_s = stream_w / chip.hbm_bandwidth
+    broadcast_s = max(weight_stream_s,
+                      stream_w / chip.ici_broadcast_bandwidth) \
+        + (data - 1) * ICI_HOP_LATENCY_S
+    fc_rest_s = max(0.0, wave_shard.fc_s - weight_stream_s)
+    mb_eff = min(batch, microbatch)
+    n_waves = -(-batch // microbatch)
+    wave_ind = zoo_wave_cost(net, mb_eff, **kw)
+    independent_s = wave_ind.conv_s + n_waves * wave_ind.fc_s
+    return ShardedWaveCost(
+        net=net, batch=batch, data=data, microbatch=microbatch,
+        weight_bytes=bytes_w if bytes_w is not None else 4, shard=shard,
+        conv_s=wave_shard.conv_s, broadcast_s=broadcast_s,
+        fc_rest_s=fc_rest_s, independent_s=independent_s,
+        weight_stream_bytes=stream_w,
+        independent_weight_bytes=n_waves * stream_w)
+
+
+def fleet_shard_crossover_batch(net: str, data: int, *, microbatch: int,
+                                threshold: float = 1.5,
+                                bytes_w: int | None = None,
+                                in_res: int | None = None, in_ch: int = 3,
+                                chip: TPUChip = TPU_V5E,
+                                vmem_budget: int | None = None
+                                ) -> int | None:
+    """Smallest batch (within one full-mesh wave, ``data * microbatch``)
+    at which the cooperative sharded wave's modeled speedup over
+    independent per-replica waves reaches ``threshold`` — the plannable,
+    pinnable crossover the fleet's ``shard_waves`` lane is justified by
+    (the fleet analogue of :func:`tpu_pipeline_crossover_batch` and the
+    SA-FC plan's ``flip_batch``).  ``None`` when sharding never pays off
+    by ``threshold`` within a single wave (the scheduler then leaves the
+    per-replica lane on)."""
+    if threshold <= 0:
+        raise ValueError(f"threshold must be > 0, got {threshold}")
+    for b in range(1, data * microbatch + 1):
+        sc = sharded_wave_cost(net, b, data, microbatch=microbatch,
+                               bytes_w=bytes_w, in_res=in_res,
+                               in_ch=in_ch, chip=chip,
+                               vmem_budget=vmem_budget)
+        if sc.speedup >= threshold:
+            return b
+    return None
+
+
 def pipeline_crossover_batch(net: str, *, mpna: MPNAConfig = MPNA_PAPER,
                              max_batch: int = 1 << 16) -> int:
     """The plannable micro-batch at which the pipeline's bottleneck flips

@@ -235,6 +235,38 @@ def replicated(mesh: Mesh, shapes: Any) -> Any:
 
 
 # ---------------------------------------------------------------------------
+# cooperative wave sharding (the fleet's shard_waves lane)
+# ---------------------------------------------------------------------------
+def wave_sharding(mesh: Mesh) -> NamedSharding:
+    """Row sharding for one cooperative wave: leading (batch) dim over
+    the mesh's data axes, everything else replicated."""
+    return NamedSharding(mesh, P(dp_axes(mesh) or None))
+
+
+def shard_wave_rows(x: jax.Array, mesh: Mesh) -> tuple[jax.Array, int]:
+    """Commit a wave batch ``x`` (rows leading) to ``mesh``'s data axes.
+
+    Returns ``(sharded, rows)`` where ``rows`` is the *real* row count:
+    when the batch does not divide the data degree the tail is padded
+    with zero rows before the ``device_put`` (rows are independent in
+    every kernel, so padding changes no real row's bits — the caller
+    slices the first ``rows`` rows of the output).  This is the fleet's
+    bitwise-parity-preserving alternative to whole-forward ``jax.jit``
+    with input shardings, which re-fuses the graph and breaks the
+    bit-exact contract on the interpret-mode kernels."""
+    rows = int(x.shape[0])
+    if rows < 1:
+        raise ValueError("shard_wave_rows needs at least one row")
+    n_dp = dp_size(mesh)
+    pad = (-rows) % max(1, n_dp)
+    if pad:
+        import jax.numpy as jnp
+        x = jnp.concatenate(
+            [x, jnp.zeros((pad,) + tuple(x.shape[1:]), x.dtype)])
+    return jax.device_put(x, wave_sharding(mesh)), rows
+
+
+# ---------------------------------------------------------------------------
 # activation sharding constraints (model-internal)
 # ---------------------------------------------------------------------------
 # GSPMD occasionally loses a sharding across reshapes (the classic case:

@@ -37,7 +37,10 @@ same discipline one level up, to the sharded fleet
 
 * ``kills`` — a replica dies at a configured modeled instant: its
   queued waves drain to surviving peers and its in-flight wave fails
-  and retries elsewhere;
+  and retries elsewhere.  A kill landing inside a *cooperative sharded
+  wave* (``shard_waves=True``) aborts the whole wave, re-shards its rows
+  over the sorted survivors (:func:`~repro.distributed.elastic
+  .reshard_wave`) and retries with the standard backoff;
 * ``partitions`` — a replica's heartbeats are dropped for a modeled
   window: the failure detector declares it suspect (drain + replan),
   and when the partition heals it beats again and rejoins;

@@ -42,11 +42,35 @@ Architecture
   :class:`~repro.serve.errors.ReplicaLostError` results — the fleet
   reports, it never wedges.
 
-Every admitted request still ends as exactly one of served / shed /
-quarantined, and a served request's logits are **bitwise equal** to its
-model's single-device unbatched forward, no matter which replica (or
-how many retries) served it.  The whole schedule is a pure function of
-(trace, configs, chaos plan) and is gated by ``BENCH_sharded.json``.
+* **Cooperative sharded waves** (``shard_waves=True``): when a model's
+  queue exceeds its planner micro-batch, the scheduler cuts ONE wave of
+  up to ``data x bb`` rows and executes it across every free healthy
+  replica — rows committed to the ``("data",)`` mesh via
+  ``jax.device_put`` + ``NamedSharding``
+  (:func:`~repro.distributed.sharding.shard_wave_rows`), priced by
+  :func:`~repro.core.perf_model.sharded_wave_cost` (one broadcast-fed
+  FC weight stream instead of per-replica HBM streams).  A participant
+  dying mid-wave aborts the wave (``shard_abort``), re-deals its rows
+  over the survivors (``reshard``,
+  :func:`~repro.distributed.elastic.reshard_wave` — the retry path
+  honors the pinned assignment), and retries with the usual backoff;
+  below two usable replicas the lane degrades to the per-replica path
+  with a typed ``shard_fallback`` event, never an error.
+
+Public API: :class:`FleetServer` (``submit`` / ``serve`` /
+``pending_count``; knobs: ``n_replicas``, ``policy``, ``placement``,
+``faults``, ``admission``, ``recovery``, ``shard_waves``,
+``devices``), the :class:`PlacementPolicy` hierarchy (``PLACEMENTS``),
+and the report types :class:`FleetReport` / :class:`FleetWaveDecision`
+/ :class:`FleetEvent` / :class:`ReplicaStats`.
+
+Invariants: every admitted request ends as exactly one of served /
+shed / quarantined (zero unaccounted); a served request's logits are
+**bitwise equal** to its model's single-device unbatched forward, no
+matter which replica, how many retries, or whether the wave was
+sharded over ``data=4``; the whole modeled schedule is a pure function
+of (trace, configs, chaos plan) — it never reads the device count —
+and is gated by ``BENCH_sharded.json``.
 """
 from __future__ import annotations
 
@@ -57,7 +81,7 @@ from collections.abc import Callable, Sequence
 import numpy as np
 
 from repro.core.perf_model import WaveCost
-from repro.distributed.elastic import replan
+from repro.distributed.elastic import replan, reshard_wave
 from repro.distributed.fault_tolerance import HeartbeatTracker, StepMonitor
 from repro.serve.cnn_server import CNNRequest, CNNServer
 from repro.serve.errors import (CorruptOutputError, InsufficientReplicasError,
@@ -149,7 +173,11 @@ class FleetWaveDecision:
     """One fleet scheduling decision: at modeled ``t_s``, ``replica``
     dispatched ``model``'s wave of ``batch`` requests at the modeled
     stage occupancies below.  ``fault`` annotates what fleet chaos did
-    to the attempt (``replica_dead`` = the replica died mid-wave)."""
+    to the attempt (``replica_dead`` = the replica died mid-wave).
+    ``shards`` is empty for a per-replica wave; for a cooperative
+    sharded wave it lists every participating replica (``replica`` is
+    the root whose queue the wave was cut from) and ``conv_s``/``fc_s``
+    are the sharded stage terms (per-shard conv, broadcast-fed FC)."""
     index: int
     t_s: float
     replica: str
@@ -160,10 +188,15 @@ class FleetWaveDecision:
     fc_s: float
     fault: str = "none"        # none|stall|timeout|replica_dead
     stall_factor: float = 1.0
+    shards: tuple[str, ...] = ()
 
     @property
     def total_s(self) -> float:
         return self.conv_s + self.fc_s
+
+    @property
+    def sharded(self) -> bool:
+        return bool(self.shards)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,7 +207,11 @@ class FleetEvent:
     ``rejoin`` (failure-detector transitions), ``replan`` /
     ``replan_failed`` (elastic mesh proposals), ``retry`` /
     ``quarantine`` / ``shed`` (per-request outcomes), ``stall`` /
-    ``timeout`` (wave-level device faults)."""
+    ``timeout`` (wave-level device faults), ``shard_abort`` /
+    ``reshard`` / ``shard_fallback`` (cooperative-wave lifecycle: a
+    participant died mid-wave, the wave's rows were re-dealt over the
+    survivors, or the mesh fell below data=2 and the wave dropped to
+    the per-replica lane)."""
     t_s: float
     replica: str
     kind: str
@@ -292,6 +329,7 @@ class FleetWaveAttempt:
     faults: ReplicaFaults | None
     deliver: tuple[int, ...]
     execute: bool = True
+    shards: tuple[str, ...] = ()   # participants of a cooperative wave
 
 
 # ---------------------------------------------------------------------------
@@ -347,6 +385,7 @@ class FleetServer:
                  admission: AdmissionConfig | None = None,
                  recovery: RecoveryConfig | None = None,
                  devices: Sequence | None = None,
+                 shard_waves: bool = False,
                  mesh_model_parallel: int = 1,
                  mesh_global_batch: int = 64,
                  mesh_pod_size: int = 64) -> None:
@@ -369,6 +408,7 @@ class FleetServer:
             else AdmissionConfig()
         self.recovery = recovery if recovery is not None \
             else RecoveryConfig()
+        self.shard_waves = shard_waves
         self.mesh_model_parallel = mesh_model_parallel
         self.mesh_global_batch = mesh_global_batch
         self.mesh_pod_size = mesh_pod_size
@@ -410,6 +450,20 @@ class FleetServer:
         distinct = []
         for i in range(self.n_replicas):
             d = self.replica_device(i)
+            if d not in distinct:
+                distinct.append(d)
+        return Mesh(np.array(distinct), axis_names=("data",))
+
+    def shard_mesh(self, rids: Sequence[str]):
+        """The ``("data",)`` mesh a cooperative wave executes over: the
+        **distinct** devices of the given (healthy) participant
+        replicas.  With fewer host devices than participants the mesh is
+        narrower than the cooperative wave's logical ``data`` degree —
+        as with :meth:`mesh`, the modeled schedule never reads it."""
+        from jax.sharding import Mesh
+        distinct = []
+        for rid in rids:
+            d = self.replica_device(self.replica_ids.index(rid))
             if d not in distinct:
                 distinct.append(d)
         return Mesh(np.array(distinct), axis_names=("data",))
@@ -493,6 +547,7 @@ class FleetServer:
                                pending={m: [] for m in self.models})
             for idx, rid in enumerate(self.replica_ids)}
         tenant_depth: dict[str, int] = {}
+        resharded: dict[int, str] = {}   # uid -> survivor pinned by reshard
         retry_heap: list[tuple[float, int, ZooRequest]] = []
         decisions: list[FleetWaveDecision] = []
         attempts: list[FleetWaveAttempt] = []
@@ -531,7 +586,19 @@ class FleetServer:
             return [st for st in states.values() if st.alive]
 
         def place(r: ZooRequest, t: float) -> str | None:
-            """Route ``r`` onto a replica queue; None = nowhere left."""
+            """Route ``r`` onto a replica queue; None = nowhere left.
+            A request whose sharded wave was aborted mid-flight carries a
+            :func:`~repro.distributed.elastic.reshard_wave` pin — honor
+            it while that survivor is usable (re-sharding moves in-flight
+            state deterministically; free placement is the fallback)."""
+            pinned = resharded.pop(r.uid, None)
+            if pinned is not None and states[pinned].usable():
+                st = states[pinned]
+                r.replica = pinned
+                r.served_by = r.model
+                st.pending[r.model].append(r)
+                tenant_depth[r.tenant] = tenant_depth.get(r.tenant, 0) + 1
+                return pinned
             cands = candidates_for_place()
             if not cands:
                 return None
@@ -754,6 +821,168 @@ class FleetServer:
             chosen = self.policy.pick(now, cands, self._cost)
             zm = self.models[chosen]
             queue = self.policy.wave_order(st.pending[chosen])
+
+            # -- cooperative sharded wave (the shard_waves lane) ------------
+            # The fleet-wide queue of the chosen model exceeding one
+            # replica's planner micro-batch is the modeled crossover
+            # trigger (perf_model.fleet_shard_crossover_batch breaks
+            # even one row past a full microbatch wave): instead of
+            # fanning independent per-replica waves, cut ONE wave of up
+            # to data x bb rows from every free healthy replica's queue
+            # and run it across the mesh.  Below data=2 the lane
+            # degrades to the per-replica path with a typed event,
+            # never an error.
+            merged: list[ZooRequest] = []
+            participants: list[_ReplicaState] = []
+            if self.shard_waves:
+                participants = sorted(
+                    (s for s in states.values()
+                     if s.usable() and s.conv_free <= now),
+                    key=lambda s: s.index)
+                merged = self.policy.wave_order(
+                    [r for p in participants for r in p.pending[chosen]])
+            if self.shard_waves and len(merged) > zm.microbatch:
+                if len(participants) < 2:
+                    events.append(FleetEvent(
+                        now, rid, "shard_fallback",
+                        "mesh below data=2 "
+                        f"({len(participants)} usable replica(s) free); "
+                        "cooperative wave falls back to the per-replica "
+                        "lane", model=chosen))
+                else:
+                    shard_rids = tuple(s.rid for s in participants)
+                    data = len(participants)
+                    cut = zm.sharded_microbatch(data)
+                    wave = merged[:cut]
+                    cut_ids = {id(r) for r in wave}
+                    for p in participants:
+                        p.pending[chosen] = [
+                            r for r in p.pending[chosen]
+                            if id(r) not in cut_ids]
+                    for r in wave:
+                        tenant_depth[r.tenant] -= 1
+                    cost = zm.sharded_wave_cost(len(wave),
+                                                data).as_wave_cost()
+                    attempt = self._attempt_idx
+                    self._attempt_idx += 1
+                    faults = inj.wave_faults(st.index, attempt) \
+                        if inj is not None else None
+                    kind = faults.kind if faults is not None else "none"
+                    uids = tuple(r.uid for r in wave)
+                    stall = faults.stall_factor if kind == "stall" else 1.0
+                    timed_out = stall >= rec.wave_timeout_factor
+                    eff = cost.scaled(min(stall,
+                                          rec.wave_timeout_factor)) \
+                        if stall != 1.0 else cost
+                    conv_done = now + eff.conv_s
+                    fc_start = max(conv_done,
+                                   max(p.fc_free for p in participants))
+                    fc_done = fc_start + eff.fc_s
+
+                    victims = [(kills[p.rid], p.rid) for p in participants
+                               if p.rid in kills
+                               and now < kills[p.rid] <= fc_done]
+                    if victims:
+                        # a participant dies mid-wave: abort the whole
+                        # cooperative wave, re-shard its rows over the
+                        # survivors, retry with backoff
+                        t_kill, dead_rid = min(victims)
+                        events.append(FleetEvent(
+                            t_kill, dead_rid, "shard_abort",
+                            f"participant {dead_rid} died mid-wave; "
+                            f"cooperative data={data} wave aborted",
+                            uids=uids, attempt=attempt, model=chosen))
+                        decisions.append(FleetWaveDecision(
+                            index=len(decisions), t_s=now, replica=rid,
+                            model=chosen, uids=uids, batch=len(wave),
+                            conv_s=eff.conv_s, fc_s=eff.fc_s,
+                            fault="replica_dead", stall_factor=stall,
+                            shards=shard_rids))
+                        attempts.append(FleetWaveAttempt(
+                            attempt, rid, chosen, list(wave), faults,
+                            deliver=(), execute=False,
+                            shards=shard_rids))
+                        for p in participants:
+                            p.waves += 1
+                        fire_kill(dead_rid, t_kill)
+                        survivors = [p.rid for p in participants
+                                     if states[p.rid].usable()]
+                        try:
+                            asg = reshard_wave(uids, survivors)
+                        except InsufficientReplicasError as e:
+                            events.append(FleetEvent(
+                                t_kill, "-", "replan_failed",
+                                f"reshard: {e.message}", uids=uids,
+                                attempt=attempt, model=chosen))
+                        else:
+                            resharded.update(
+                                {u: r for r, us in asg.assignment
+                                 for u in us})
+                            events.append(FleetEvent(
+                                t_kill, dead_rid, "reshard",
+                                "in-flight wave re-sharded over "
+                                f"data={asg.data}: " + " ".join(
+                                    f"{r}x{len(us)}"
+                                    for r, us in asg.assignment),
+                                uids=uids, attempt=attempt,
+                                model=chosen))
+                        fail_wave(wave, dead_rid, chosen, t_kill,
+                                  "replica_dead", attempt)
+                        continue
+
+                    # the cooperative wave occupies every participant
+                    for p in participants:
+                        p.conv_free = max(conv_done, fc_start)
+                        p.fc_free = fc_done
+                        p.busy_s += eff.total_s
+                        p.waves += 1
+
+                    if timed_out:
+                        events.append(FleetEvent(
+                            now, rid, "timeout",
+                            f"stall x{stall:g} >= timeout factor "
+                            f"{rec.wave_timeout_factor:g}, sharded "
+                            "wave aborted", uids=uids, attempt=attempt,
+                            model=chosen))
+                        decisions.append(FleetWaveDecision(
+                            index=len(decisions), t_s=now, replica=rid,
+                            model=chosen, uids=uids, batch=len(wave),
+                            conv_s=eff.conv_s, fc_s=eff.fc_s,
+                            fault="timeout", stall_factor=stall,
+                            shards=shard_rids))
+                        attempts.append(FleetWaveAttempt(
+                            attempt, rid, chosen, list(wave), faults,
+                            deliver=(), execute=False,
+                            shards=shard_rids))
+                        fail_wave(wave, rid, chosen, fc_done,
+                                  "timeout", attempt)
+                        continue
+
+                    for p in participants:
+                        if not partitioned(p.rid, fc_done):
+                            beats.beat(p.rid, fc_done)
+                    verdict = monitors[rid].observe(attempt, stall)
+                    if verdict == "straggler":
+                        events.append(FleetEvent(
+                            fc_done, rid, "stall",
+                            f"straggler verdict: x{stall:g} modeled "
+                            "sharded wave time", uids=uids,
+                            attempt=attempt, model=chosen))
+                    for r in wave:
+                        r.dispatch_s, r.finish_s = now, fc_done
+                        r.status = "served"
+                        r.replica = rid
+                    terminal += len(wave)
+                    decisions.append(FleetWaveDecision(
+                        index=len(decisions), t_s=now, replica=rid,
+                        model=chosen, uids=uids, batch=len(wave),
+                        conv_s=eff.conv_s, fc_s=eff.fc_s, fault=kind,
+                        stall_factor=stall, shards=shard_rids))
+                    attempts.append(FleetWaveAttempt(
+                        attempt, rid, chosen, list(wave), faults,
+                        deliver=uids, shards=shard_rids))
+                    continue
+
             wave, rest = queue[:zm.microbatch], queue[zm.microbatch:]
             st.pending[chosen] = rest
             for r in wave:
@@ -853,6 +1082,9 @@ class FleetServer:
         for a in attempts:
             if not a.execute:
                 continue
+            if a.shards:
+                self._execute_sharded(a, events)
+                continue
             srv = self._lane(a.replica, a.model)
             device = self.replica_device(
                 self.replica_ids.index(a.replica))
@@ -911,6 +1143,64 @@ class FleetServer:
                     continue
                 if r.uid in deliver:
                     r.logits, r.done = logits, True
+
+    def _execute_sharded(self, a: FleetWaveAttempt,
+                         events: list[FleetEvent]) -> None:
+        """Run one cooperative wave over the participants' mesh: the
+        row batch is committed to the ``("data",)`` axis with
+        ``jax.device_put`` + ``NamedSharding``
+        (:func:`~repro.distributed.sharding.shard_wave_rows`, which pads
+        non-divisible batches with zero rows) and the model's forward
+        runs once over the sharded array.  The per-layer kernels are the
+        same compiled pallas calls the per-replica lanes run — rows are
+        independent in every one of them, so each served row stays
+        **bitwise equal** to the single-device unbatched forward (the
+        probe that rules out whole-forward ``jax.jit`` here: re-fusing
+        the graph breaks that bit-exactness).  Same ``isfinite`` guard
+        and never-wedge discipline as the per-replica executor."""
+        import jax.numpy as jnp
+
+        from repro.distributed.sharding import shard_wave_rows
+        from repro.models import cnn
+
+        m = self.models[a.model]
+        deliver = set(a.deliver)
+        try:
+            mesh = self.shard_mesh(a.shards)
+            x = jnp.stack([jnp.asarray(r.image, m.server.dtype)
+                           for r in a.requests])
+            xs, rows = shard_wave_rows(x, mesh)
+            logits = np.asarray(
+                cnn.cnn_forward(m.spec.net, m.params, xs,
+                                eng=m.server.engine))[:rows]
+        except Exception as e:          # noqa: BLE001 — never wedge
+            for r in a.requests:
+                if r.uid in deliver:
+                    r.status = "quarantined"
+                    r.error = ServeError(
+                        f"sharded wave execution raised "
+                        f"{type(e).__name__}: {e}", uid=r.uid,
+                        model=a.model)
+                    events.append(FleetEvent(
+                        -1.0, a.replica, "quarantine",
+                        f"sharded executor raised {type(e).__name__}",
+                        uids=(r.uid,), attempt=a.index, model=a.model))
+            return
+        for i, r in enumerate(a.requests):
+            row = logits[i]
+            if not bool(np.isfinite(row).all()):
+                if r.uid in deliver:
+                    r.status = "quarantined"
+                    r.error = CorruptOutputError(
+                        "non-finite logits at the integrity guard",
+                        uid=r.uid, model=a.model)
+                    events.append(FleetEvent(
+                        -1.0, a.replica, "quarantine",
+                        "integrity guard: genuine non-finite logits",
+                        uids=(r.uid,), attempt=a.index, model=a.model))
+                continue
+            if r.uid in deliver:
+                r.logits, r.done = row, True
 
     # -- drain ---------------------------------------------------------------
     def serve(self, *, execute: bool = True) -> FleetReport:

@@ -83,7 +83,8 @@ import numpy as np
 
 from repro.configs.registry import ZooModelSpec, get_zoo_model
 from repro.core.engine import Engine
-from repro.core.perf_model import WaveCost, zoo_wave_cost
+from repro.core.perf_model import (ShardedWaveCost, WaveCost,
+                                   sharded_wave_cost, zoo_wave_cost)
 from repro.core.schedule import ScheduleRegistry
 from repro.distributed.fault_tolerance import HeartbeatTracker, StepMonitor
 from repro.serve.cnn_server import CNNRequest, CNNServer
@@ -398,11 +399,29 @@ class ZooModel:
         planner-preferred micro-batch (public, satellite of PR 4's bb)."""
         return self.server.microbatch
 
+    def sharded_microbatch(self, data: int) -> int:
+        """The wave size a *cooperative* sharded wave may grow to when
+        ``data`` replicas execute it together: each replica still holds
+        its planner-preferred resident tile (``bb`` rows), so the fleet
+        wave is ``data x microbatch`` — the only place a zoo wave is
+        allowed to exceed :attr:`microbatch`."""
+        if data < 1:
+            raise ValueError(f"data must be >= 1, got {data}")
+        return self.microbatch * data
+
     def wave_cost(self, batch: int) -> WaveCost:
         """Modeled dual-array stage cost of one ``batch``-sample wave of
         this variant (memoized in perf_model)."""
         return zoo_wave_cost(self.spec.net, batch,
                              bytes_w=self.spec.weight_bytes)
+
+    def sharded_wave_cost(self, batch: int, data: int) -> ShardedWaveCost:
+        """Modeled cost of one cooperative ``data``-way sharded wave of
+        this variant vs. independent per-replica waves (see
+        :func:`~repro.core.perf_model.sharded_wave_cost`)."""
+        return sharded_wave_cost(self.spec.net, batch, data,
+                                 microbatch=self.microbatch,
+                                 bytes_w=self.spec.weight_bytes)
 
 
 def build_zoo(names: Sequence[str], *, seed: int = 0,

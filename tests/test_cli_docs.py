@@ -1,0 +1,86 @@
+"""Smoke tests for the human-facing CLIs and the docs tree.
+
+The docs PR contract: ``benchmarks/run.py`` and ``python -m
+repro.analysis`` must have accurate, working ``--help`` (no import
+crashes, the documented flags present), and every markdown link in
+README/docs/ROADMAP must resolve (tools/linkcheck.py, the CI ``docs``
+job).  These run the real entry points in subprocesses.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(argv, **env_extra):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env.update(env_extra)
+    return subprocess.run(argv, cwd=REPO, env=env, capture_output=True,
+                          text=True, timeout=120)
+
+
+def test_bench_run_help():
+    p = _run([sys.executable, "benchmarks/run.py", "--help"])
+    assert p.returncode == 0, p.stderr
+    for flag in ("--list", "--only"):
+        assert flag in p.stdout
+    assert "BENCH_*.json" in p.stdout          # the docstring is the epilog
+
+
+def test_bench_run_list_names_every_group():
+    p = _run([sys.executable, "benchmarks/run.py", "--list"])
+    assert p.returncode == 0, p.stderr
+    names = set(p.stdout.split())
+    assert {"conv_fused", "fc_batch", "pipeline_serve", "zoo_serve",
+            "chaos_serve", "fleet_serve"} <= names
+
+
+def test_bench_run_rejects_unknown_group():
+    p = _run([sys.executable, "benchmarks/run.py", "--only", "nope"])
+    assert p.returncode != 0
+    assert "nope" in p.stderr
+
+
+def test_analysis_help():
+    p = _run([sys.executable, "-m", "repro.analysis", "--help"])
+    assert p.returncode == 0, p.stderr
+    for flag in ("--net", "--all-zoo-variants"):
+        assert flag in p.stdout
+
+
+def test_linkcheck_clean_on_repo_docs():
+    p = _run([sys.executable, "tools/linkcheck.py"])
+    assert p.returncode == 0, p.stderr + p.stdout
+    assert "0 broken links" in p.stdout
+
+
+def test_linkcheck_flags_breakage(tmp_path):
+    bad = tmp_path / "bad.md"
+    bad.write_text("# T\n\n[gone](no_such_file.md) "
+                   "[badanchor](bad.md#not-a-heading)\n")
+    p = _run([sys.executable, "tools/linkcheck.py", str(bad)])
+    assert p.returncode == 2
+    assert "missing file" in p.stderr and "missing anchor" in p.stderr
+
+
+def test_linkcheck_rejects_relative_root_badge(tmp_path):
+    bad = tmp_path / "badge.md"
+    bad.write_text("[![ci](../../actions/workflows/ci.yml/badge.svg)]"
+                   "(../../actions/workflows/ci.yml)\n")
+    p = _run([sys.executable, "tools/linkcheck.py", str(bad)])
+    assert p.returncode != 0
+    assert "relative-root" in p.stderr
+
+
+@pytest.mark.parametrize("doc", ["architecture.md", "dataflows.md",
+                                 "serving.md", "benchmarks.md"])
+def test_docs_tree_exists_and_linked_from_readme(doc):
+    assert os.path.exists(os.path.join(REPO, "docs", doc))
+    readme = open(os.path.join(REPO, "README.md"), encoding="utf-8").read()
+    assert f"docs/{doc}" in readme

@@ -1,0 +1,119 @@
+"""Markdown link checker for the repo's docs tree (stdlib only).
+
+Walks README.md, ROADMAP.md and docs/*.md, extracts every inline
+markdown link/image ``[text](target)``, and verifies:
+
+* **relative file targets** exist on disk (resolved against the file
+  containing the link);
+* **anchor targets** (``#section`` or ``file.md#section``) resolve to a
+  real heading in the target file, using GitHub's heading-slug rules
+  (lowercase, spaces to hyphens, punctuation stripped);
+* **absolute URLs** are well-formed http(s) — never fetched (CI must
+  not depend on the network), but a relative-path badge that only
+  renders on github.com is rejected here.
+
+Exit status is the number of broken links; CI's ``docs`` job runs this
+on every push/PR.
+
+    python tools/linkcheck.py            # check the default set
+    python tools/linkcheck.py FILE...    # check specific files
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+# inline links/images: [text](target) / ![alt](target); nested badge
+# links ([![alt](img)](target)) surface both targets via the inner scan
+_LINK = re.compile(r"!?\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^()\s]+(?:\([^()]*\))?)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_FENCE = re.compile(r"^(```|~~~)")
+
+
+def _slug(heading: str) -> str:
+    """GitHub's anchor slug: drop markup, lowercase, punctuation out."""
+    text = re.sub(r"[`*_]", "", heading)
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # linked headings
+    text = text.strip().lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def _anchors(path: str) -> set[str]:
+    anchors: set[str] = set()
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for line in fh:
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if m:
+                anchors.add(_slug(m.group(2)))
+    return anchors
+
+
+def _links(path: str) -> list[tuple[int, str]]:
+    found: list[tuple[int, str]] = []
+    in_fence = False
+    with open(path, encoding="utf-8") as fh:
+        for lineno, line in enumerate(fh, 1):
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            found += [(lineno, m.group(1)) for m in _LINK.finditer(line)]
+    return found
+
+
+def check_file(path: str) -> list[str]:
+    errors: list[str] = []
+    base = os.path.dirname(os.path.abspath(path))
+    for lineno, target in _links(path):
+        where = f"{path}:{lineno}"
+        if target.startswith(("http://", "https://")):
+            if not re.match(r"https?://[\w.-]+/?", target):
+                errors.append(f"{where}: malformed URL {target!r}")
+            continue
+        if target.startswith("mailto:"):
+            continue
+        if target.startswith("../../"):
+            # the GitHub relative-root trick ([..]/../actions/...) only
+            # renders on github.com — require absolute URLs instead
+            errors.append(f"{where}: relative-root link {target!r} "
+                          "(use an absolute https:// URL)")
+            continue
+        file_part, _, anchor = target.partition("#")
+        dest = os.path.normpath(os.path.join(base, file_part)) \
+            if file_part else os.path.abspath(path)
+        if not os.path.exists(dest):
+            errors.append(f"{where}: missing file {target!r}")
+            continue
+        if anchor and dest.endswith(".md") \
+                and _slug(anchor) not in _anchors(dest):
+            errors.append(f"{where}: missing anchor {target!r}")
+    return errors
+
+
+def main(argv: list[str] | None = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = argv or sorted(
+        [os.path.join(root, "README.md"), os.path.join(root, "ROADMAP.md")]
+        + glob.glob(os.path.join(root, "docs", "*.md")))
+    errors: list[str] = []
+    for f in files:
+        errors += check_file(f)
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"linkcheck: {len(files)} files, {len(errors)} broken links")
+    return len(errors)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
